@@ -1,0 +1,64 @@
+"""Kernel micro-bench: per-call wall time of the jnp execution path on CPU
+plus analytic FLOPs (the TPU-relevant number is the FLOPs/bytes profile; the
+CPU microseconds only sanity-check that the memory-efficient paths run).
+
+Usage: python -m benchmarks.kernel_bench
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+
+def _timeit(fn, *args, n=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(n):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / n * 1e6  # us
+
+
+def main() -> None:
+    key = jax.random.key(0)
+    print("kernel,shape,us_per_call,gflops_analytic")
+
+    # flash attention (prefill): B=1, S=2048, Hq=8, Hkv=2, D=64
+    b, s, hq, hkv, d = 1, 2048, 8, 2, 64
+    q = jax.random.normal(key, (b, s, hq, d), jnp.float32)
+    k = jax.random.normal(key, (b, s, hkv, d), jnp.float32)
+    v = jax.random.normal(key, (b, s, hkv, d), jnp.float32)
+    fa = jax.jit(lambda q, k, v: ops.flash_attention(q, k, v, causal=True))
+    us = _timeit(fa, q, k, v)
+    gf = 4 * b * s * s * hq * d / 2 / 1e9  # causal halves the score matmul
+    print(f"flash_attention,B{b}xS{s}xH{hq}/{hkv}xD{d},{us:.0f},{gf:.2f}")
+
+    # decode attention: B=32, Smax=8192
+    b, smax = 32, 8192
+    q = jax.random.normal(key, (b, 1, hq, d), jnp.float32)
+    k = jax.random.normal(key, (b, smax, hkv, d), jnp.float32)
+    v = jax.random.normal(key, (b, smax, hkv, d), jnp.float32)
+    lens = jnp.full((b,), smax // 2, jnp.int32)
+    da = jax.jit(lambda q, k, v, l: ops.decode_attention(q, k, v, l))
+    us = _timeit(da, q, k, v, lens)
+    gf = 4 * b * smax * hq * d / 1e9
+    print(f"decode_attention,B{b}xS{smax}ragged,{us:.0f},{gf:.2f}")
+
+    # SSD scan: B=2, S=1024, H=4, P=32, N=16
+    b, s, h, p, n = 2, 1024, 4, 32, 16
+    x = jax.random.normal(key, (b, s, h, p), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(key, (b, s, h), jnp.float32))
+    A = -jnp.ones((h,), jnp.float32)
+    B_ = jax.random.normal(key, (b, s, n), jnp.float32)
+    C = jax.random.normal(key, (b, s, n), jnp.float32)
+    sc = jax.jit(lambda *a: ops.ssd_scan(*a, chunk=256))
+    us = _timeit(sc, x, dt, A, B_, C)
+    gf = (2 * b * s * h * p * n * 2) / 1e9
+    print(f"ssd_scan,B{b}xS{s}xH{h}xP{p}xN{n},{us:.0f},{gf:.2f}")
+
+
+if __name__ == "__main__":
+    main()

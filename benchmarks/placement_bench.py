@@ -1,0 +1,278 @@
+"""Paper Sec-5 evaluation: Figures 9 (initial deployment), 10 (compaction),
+11 (reconfiguration), on 8-GPU and 80-GPU clusters, 100 random test cases.
+
+Approaches (paper Sec 5.1):
+  first_fit      — GPUs/workloads by id, indexes from 0
+  load_balanced  — GPUs by joint slice utilization ascending, indexes from 0
+  rule_based     — Sec-4.2 heuristic (ours)
+  mip            — WPM with existing placements fixed (ours)
+  joint_mip      — WPM jointly re-placing existing workloads (ours; Fig 9 only)
+  patterns       — beyond-paper pattern-enumeration exact solver (reconfig only)
+
+Every approach is scored with the Table-3 metrics averaged over test cases,
+then normalized against the highest value per metric (as the paper plots).
+
+Usage: python -m benchmarks.placement_bench --case initial --gpus 8 --cases 100
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.core import baselines, heuristic, metrics
+from repro.core.migration import plan_migration
+from repro.core.patterns import reconfigure_patterns
+from repro.core.simulator import TestCase, generate_test_case
+from repro.core.state import ClusterState, GPUState, Workload
+from repro.core.wpm_mip import solve_wpm
+
+# ---------------------------------------------------------------------------
+# baseline compaction / reconfiguration replays (paper Sec 5.2.2/5.2.3)
+# ---------------------------------------------------------------------------
+def _spot_first_fit(state: ClusterState, w: Workload, candidates) -> Optional[Tuple[str, int]]:
+    for gid in sorted(candidates):
+        idx = baselines._try_place(state.gpus[gid], w, numeric_order=True)
+        if idx is not None:
+            return gid, idx
+    return None
+
+
+def _spot_load_balanced(state, w, candidates) -> Optional[Tuple[str, int]]:
+    ordered = sorted(
+        candidates, key=lambda gid: (state.gpus[gid].joint_slice_utilization(), gid)
+    )
+    for gid in ordered:
+        idx = baselines._try_place(state.gpus[gid], w, numeric_order=True)
+        if idx is not None:
+            return gid, idx
+    return None
+
+
+_SPOTS: Dict[str, Callable] = {
+    "first_fit": _spot_first_fit,
+    "load_balanced": _spot_load_balanced,
+}
+
+
+def baseline_compaction(state: ClusterState, policy: str) -> None:
+    """Compaction replay with a baseline placement rule: vacate the least
+    utilized GPU into other allocated GPUs, placing per ``policy``."""
+    spot = _SPOTS[policy]
+    progress = True
+    while progress:
+        progress = False
+        used = sorted(
+            state.used_gpus(), key=lambda g: (g.joint_slice_utilization(), g.gid)
+        )
+        for gpu in used:
+            others = [g.gid for g in state.used_gpus() if g.gid != gpu.gid]
+            trial = state.clone()
+            moves = []
+            ok = True
+            for pl in list(trial.gpus[gpu.gid].placements):
+                w = trial.workloads[pl.wid]
+                trial.gpus[gpu.gid].remove(pl.wid)
+                s = spot(trial, w, others)
+                if s is None:
+                    ok = False
+                    break
+                trial.place(w.wid, *s)
+                moves.append((w.wid, *s))
+            # one-shot property: destinations must be free in the real state
+            if ok:
+                for wid, dst, idx in moves:
+                    prof = state.gpus[dst].device.profile(
+                        state.workloads[wid].profile_id
+                    )
+                    if not state.gpus[dst].can_place_at(prof, idx):
+                        ok = False
+                        break
+            if ok:
+                for wid, dst, idx in moves:
+                    state.gpus[gpu.gid].remove(wid)
+                    state.place(wid, dst, idx)
+                progress = True
+                break
+
+
+def baseline_reconfiguration(state: ClusterState, policy: str) -> List[Workload]:
+    """Reconfiguration replay: re-place ALL workloads from scratch with the
+    baseline rule (arrival order, indexes from 0 — paper Sec 5.2.3)."""
+    device = next(iter(state.gpus.values())).device
+    workloads = state.placed_workloads()
+    fresh = ClusterState(
+        gpus={gid: GPUState(gid, device) for gid in state.gpus},
+        workloads={w.wid: w for w in workloads},
+    )
+    fn = baselines.first_fit if policy == "first_fit" else baselines.load_balanced
+    pending = fn(fresh, workloads)
+    state.gpus = fresh.gpus
+    state.workloads = fresh.workloads
+    return pending
+
+
+# ---------------------------------------------------------------------------
+# per-use-case runners: (test case) -> final state (+ pending, solve time)
+# ---------------------------------------------------------------------------
+def _run_initial(tc: TestCase, approach: str, time_limit: float):
+    st = tc.initial.clone()
+    t0 = time.time()
+    if approach == "first_fit":
+        pending = baselines.first_fit(st, tc.new_workloads)
+    elif approach == "load_balanced":
+        pending = baselines.load_balanced(st, tc.new_workloads)
+    elif approach == "rule_based":
+        pending = heuristic.initial_deployment(st, tc.new_workloads)
+    elif approach == "mip":
+        res = solve_wpm(st, tc.new_workloads, movable=False, allow_reconfig=False,
+                        time_limit=time_limit)
+        st, pending = res.state, res.pending
+    elif approach == "joint_mip":
+        res = solve_wpm(st, tc.new_workloads, movable=True, allow_reconfig=True,
+                        time_limit=time_limit)
+        st, pending = res.state, res.pending
+    else:
+        raise ValueError(approach)
+    return st, pending, time.time() - t0
+
+
+def _run_compaction(tc: TestCase, approach: str, time_limit: float):
+    st = tc.initial.clone()
+    t0 = time.time()
+    if approach in _SPOTS:
+        baseline_compaction(st, approach)
+    elif approach == "rule_based":
+        heuristic.compaction(st)
+    elif approach == "mip":
+        res = solve_wpm(st, (), movable=True, allow_reconfig=True,
+                        time_limit=time_limit)
+        st = res.state
+    else:
+        raise ValueError(approach)
+    return st, [], time.time() - t0
+
+
+def _run_reconfiguration(tc: TestCase, approach: str, time_limit: float):
+    st = tc.initial.clone()
+    t0 = time.time()
+    if approach in _SPOTS:
+        pending = baseline_reconfiguration(st, approach)
+    elif approach == "rule_based":
+        pending = heuristic.reconfiguration(st)
+    elif approach == "mip":
+        res = solve_wpm(st, (), movable=True, allow_reconfig=True,
+                        time_limit=time_limit)
+        st, pending = res.state, res.pending
+    elif approach == "patterns":
+        res = reconfigure_patterns(st, time_limit=time_limit)
+        st, pending = res.state, []
+    else:
+        raise ValueError(approach)
+    return st, pending, time.time() - t0
+
+
+_RUNNERS = {
+    "initial": _run_initial,
+    "compaction": _run_compaction,
+    "reconfiguration": _run_reconfiguration,
+}
+
+APPROACHES = {
+    "initial": ("first_fit", "load_balanced", "rule_based", "mip", "joint_mip"),
+    "compaction": ("first_fit", "load_balanced", "rule_based", "mip"),
+    "reconfiguration": ("first_fit", "load_balanced", "rule_based", "mip", "patterns"),
+}
+
+_METRICS = (
+    "n_gpus", "memory_wastage", "compute_wastage", "availability",
+    "migration_size", "pending_model_size", "sequential_migrations",
+    "memory_utilization", "compute_utilization",
+)
+
+
+def run_case(
+    case: str,
+    n_gpus: int,
+    n_cases: int,
+    time_limit: float,
+    mip_cases: Optional[int] = None,
+    approaches: Optional[Sequence[str]] = None,
+) -> Dict[str, Dict[str, float]]:
+    """Returns {approach: {metric: mean}} plus solve-time and seq-migration."""
+    approaches = approaches or APPROACHES[case]
+    runner = _RUNNERS[case]
+    sums: Dict[str, Dict[str, float]] = {a: {m: 0.0 for m in _METRICS} for a in approaches}
+    counts: Dict[str, int] = {a: 0 for a in approaches}
+    for a in approaches:
+        sums[a]["solve_seconds"] = 0.0
+        n = n_cases
+        if mip_cases is not None and a in ("mip", "joint_mip", "patterns"):
+            n = min(n, mip_cases)
+        for seed in range(n):
+            tc = generate_test_case(seed, n_gpus=n_gpus)
+            # compaction/reconfiguration act on existing workloads only —
+            # pending is null for them by construction (paper Sec 5.2.2)
+            all_wl = list(tc.initial.workloads.values())
+            if case == "initial":
+                all_wl += list(tc.new_workloads)
+            final, pending, secs = runner(tc, a, time_limit)
+            final.validate()
+            m = metrics.evaluate(final, tc.initial, all_wl)
+            for k in _METRICS:
+                sums[a][k] += float(getattr(m, k))
+            sums[a]["solve_seconds"] += secs
+            counts[a] += 1
+    return {
+        a: {k: v / max(counts[a], 1) for k, v in sums[a].items()} for a in approaches
+    }
+
+
+def normalize(table: Dict[str, Dict[str, float]]) -> Dict[str, Dict[str, float]]:
+    """Paper-style: each metric normalized against its max across approaches."""
+    out: Dict[str, Dict[str, float]] = {a: {} for a in table}
+    keys = next(iter(table.values())).keys()
+    for k in keys:
+        mx = max(abs(table[a][k]) for a in table) or 1.0
+        for a in table:
+            out[a][k] = table[a][k] / mx
+    return out
+
+
+def print_table(case: str, n_gpus: int, table: Dict[str, Dict[str, float]]) -> None:
+    norm = normalize(table)
+    keys = list(next(iter(table.values())).keys())
+    print(f"\n== {case} @ {n_gpus} GPUs (mean over cases; normalized in []) ==")
+    header = "approach".ljust(15) + "".join(k[:14].rjust(16) for k in keys)
+    print(header)
+    for a, row in table.items():
+        line = a.ljust(15)
+        for k in keys:
+            line += f"{row[k]:9.3f}[{norm[a][k]:4.2f}]".rjust(16)
+        print(line)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--case", default="all",
+                    choices=["initial", "compaction", "reconfiguration", "all"])
+    ap.add_argument("--gpus", type=int, nargs="+", default=[8, 80])
+    ap.add_argument("--cases", type=int, default=100)
+    ap.add_argument("--mip-cases", type=int, default=None,
+                    help="cap test cases for MIP approaches (big clusters)")
+    ap.add_argument("--time-limit", type=float, default=30.0)
+    args = ap.parse_args()
+    cases = (
+        ["initial", "compaction", "reconfiguration"]
+        if args.case == "all" else [args.case]
+    )
+    for case in cases:
+        for g in args.gpus:
+            t0 = time.time()
+            table = run_case(case, g, args.cases, args.time_limit, args.mip_cases)
+            print_table(case, g, table)
+            print(f"   ({time.time() - t0:.0f}s)")
+
+
+if __name__ == "__main__":
+    main()

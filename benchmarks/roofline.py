@@ -1,0 +1,122 @@
+"""Roofline report: read the dry-run artifacts and print the three-term
+roofline (compute / memory / collective seconds) per (arch x shape x mesh),
+the dominant term, and the useful-FLOPs ratio.
+
+Also the perf-iteration driver: --cell re-lowers one cell with overrides
+(sharding / remat / moe impl) and prints the delta against the stored
+baseline — the hypothesis->change->measure loop of EXPERIMENTS.md §Perf.
+
+Usage:
+  python -m benchmarks.roofline                      # full table from artifacts
+  python -m benchmarks.roofline --mesh pod16x16      # one mesh
+  python -m benchmarks.roofline --cell deepseek-v3-671b train_4k --sp --tag sp1
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List
+
+
+def load_cells(root: str = "artifacts/dryrun", mesh: str = "*",
+               variants: bool = False) -> List[Dict]:
+    cells = []
+    for f in sorted(glob.glob(os.path.join(root, mesh, "*.json"))):
+        tagged = os.path.basename(f).count("__") > 1  # arch__shape__tag.json
+        if tagged != variants:
+            continue
+        with open(f) as fh:
+            cells.append(json.load(fh))
+    return cells
+
+
+def print_report(cells: List[Dict], only_mesh: str = "") -> None:
+    hdr = (
+        f"{'arch':24} {'shape':12} {'mesh':11} {'status':8} "
+        f"{'compute_s':>10} {'memory_s':>10} {'coll_s':>10} {'dominant':>12} "
+        f"{'useful':>7} {'frac':>6}"
+    )
+    print(hdr)
+    print("-" * len(hdr))
+    worst = None
+    most_coll = None
+    for c in cells:
+        if only_mesh and c["mesh"] != only_mesh:
+            continue
+        if c["status"] != "ok":
+            print(f"{c['arch']:24} {c['shape']:12} {c['mesh']:11} {c['status']:8} "
+                  f"{c.get('reason', c.get('error', ''))[:60]}")
+            continue
+        r = c["roofline"]
+        tot = r["compute_s"] + r["memory_s"] + r["collective_s"]
+        # roofline fraction: useful compute time over the bound (max term)
+        bound = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        frac = (c["model_flops"] / c["n_devices"] / 197e12) / bound if bound else 0.0
+        print(
+            f"{c['arch']:24} {c['shape']:12} {c['mesh']:11} ok       "
+            f"{r['compute_s']:10.4f} {r['memory_s']:10.4f} {r['collective_s']:10.4f} "
+            f"{r['dominant']:>12} {c['useful_ratio']:7.3f} {frac:6.3f}"
+        )
+        key = (c["arch"], c["shape"], c["mesh"])
+        if worst is None or frac < worst[1]:
+            worst = (key, frac)
+        cf = r["collective_s"] / tot if tot else 0
+        if most_coll is None or cf > most_coll[1]:
+            most_coll = (key, cf)
+    if worst:
+        print(f"\nworst roofline fraction : {worst[0]} ({worst[1]:.4f})")
+        print(f"most collective-bound   : {most_coll[0]} ({most_coll[1]:.2%} of terms)")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--root", default="artifacts/dryrun")
+    ap.add_argument("--mesh", default="")
+    ap.add_argument("--cell", nargs=2, metavar=("ARCH", "SHAPE"), default=None)
+    ap.add_argument("--multi", action="store_true", help="--cell on the 512-chip mesh")
+    ap.add_argument("--sp", action="store_true")
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--moe-impl", default="alltoall", choices=["dispatch", "alltoall"])
+    ap.add_argument("--kv-quant", action="store_true", help="int8 KV cache")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    if args.cell:
+        # perf-iteration mode: re-lower one cell with overrides
+        from repro.launch.dryrun import run_cell  # sets XLA_FLAGS on import
+
+        arch, shape = args.cell
+        cell = run_cell(
+            arch, shape, args.multi, sp=args.sp, fsdp=not args.no_fsdp,
+            moe_impl=args.moe_impl, kv_quant=args.kv_quant,
+            out_dir=args.root, tag=args.tag,
+        )
+        if cell["status"] != "ok":
+            print(cell.get("error", cell.get("reason")))
+            return
+        base_f = os.path.join(
+            args.root, cell["mesh"], f"{arch}__{shape}.json"
+        )
+        r = cell["roofline"]
+        print(f"\n{arch} x {shape} x {cell['mesh']} [{args.tag or 'variant'}]")
+        print(f"  compute={r['compute_s']:.4f}s memory={r['memory_s']:.4f}s "
+              f"collective={r['collective_s']:.4f}s dom={r['dominant']} "
+              f"useful={cell['useful_ratio']:.3f}")
+        if os.path.exists(base_f) and args.tag:
+            with open(base_f) as fh:
+                base = json.load(fh)
+            if base.get("status") == "ok":
+                b = base["roofline"]
+                for k in ("compute_s", "memory_s", "collective_s"):
+                    d = (r[k] - b[k]) / b[k] * 100 if b[k] else 0.0
+                    print(f"  {k}: {b[k]:.4f} -> {r[k]:.4f} ({d:+.1f}%)")
+        return
+
+    cells = load_cells(args.root, args.mesh or "*")
+    print_report(cells, args.mesh)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Beyond-paper: solver scaling study.
+
+How do the four approaches scale with cluster size?  The paper reports only
+8 vs 80 GPUs; here we sweep sizes and record wall time, objective quality
+(#GPUs used), and MILP size — the computational-overhead argument of Sec 4.2
+made quantitative.
+
+Usage: python -m benchmarks.solver_scaling --sizes 8 16 32 80 --seeds 3
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+from repro.core import heuristic, metrics
+from repro.core.simulator import generate_test_case
+from repro.core.wpm_mip import solve_wpm
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sizes", type=int, nargs="+", default=[8, 16, 32, 80])
+    ap.add_argument("--seeds", type=int, default=3)
+    ap.add_argument("--time-limit", type=float, default=30.0)
+    args = ap.parse_args()
+
+    print("size,approach,seconds,n_gpus,vars,cons,status")
+    for size in args.sizes:
+        for seed in range(args.seeds):
+            tc = generate_test_case(seed, n_gpus=size)
+
+            st = tc.initial.clone()
+            t0 = time.time()
+            heuristic.initial_deployment(st, tc.new_workloads)
+            hsec = time.time() - t0
+            hm = metrics.evaluate(st, tc.initial)
+            print(f"{size},rule_based,{hsec:.3f},{hm.n_gpus},0,0,exact")
+
+            t0 = time.time()
+            res = solve_wpm(
+                tc.initial.clone(), tc.new_workloads, movable=False,
+                allow_reconfig=False, time_limit=args.time_limit,
+            )
+            mm = metrics.evaluate(res.state, tc.initial)
+            print(
+                f"{size},mip,{time.time() - t0:.3f},{mm.n_gpus},"
+                f"{res.n_variables},{res.n_constraints},{res.status}"
+            )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+"""Pytest path setup only — deliberately NO XLA flags here.
+
+Smoke tests and benchmarks must see the real single CPU device; only
+launch/dryrun.py forces the 512-device host platform."""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "src"))

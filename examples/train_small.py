@@ -1,0 +1,36 @@
+"""Train a ~100M-class model end to end with checkpoint/restart.
+
+Thin wrapper over the production launcher (repro.launch.train) so the
+example exercises the same code path a real job uses: deterministic data,
+grad accumulation, auto-resume, atomic checkpoints.
+
+CPU demo (reduced config, seconds):
+    PYTHONPATH=src python examples/train_small.py
+
+Full smollm-135m (the assigned ~100M arch; takes hours on CPU, minutes on
+a TPU slice):
+    PYTHONPATH=src python examples/train_small.py --full --steps 300
+"""
+import sys
+
+from repro.launch.train import main as train_main
+
+
+def main() -> int:
+    argv = sys.argv[1:]
+    full = "--full" in argv
+    argv = [a for a in argv if a != "--full"]
+    base = ["--arch", "smollm-135m", "--ckpt-dir", "/tmp/repro-train-small",
+            "--ckpt-every", "25"]
+    if full:
+        base += ["--steps", "300", "--batch", "16", "--seq", "512",
+                 "--microbatch", "4"]
+    else:
+        base += ["--reduced", "--steps", "60", "--batch", "8", "--seq", "128",
+                 "--microbatch", "4"]
+    sys.argv = ["train_small"] + base + argv
+    return train_main()
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

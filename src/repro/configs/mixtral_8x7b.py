@@ -1,0 +1,19 @@
+"""Mixtral-8x7B (MoE 8 experts top-2, sliding-window attention).  [arXiv:2401.04088]"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="mixtral-8x7b",
+    family="moe",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=14336,
+    vocab_size=32000,
+    head_dim=128,
+    mlp="swiglu",
+    norm="rmsnorm",
+    n_experts=8,
+    experts_per_token=2,
+    sliding_window=4096,
+)

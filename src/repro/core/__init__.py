@@ -1,0 +1,18 @@
+"""Core: the paper's contribution — MIG workload placement optimization.
+
+Public API:
+    profiles     — Table-1 device/profile geometry (A100/H100)
+    tpu_profiles — TPU pod-partition adaptation
+    state        — Workload / Placement / GPUState / ClusterState
+    preprocess   — Algorithm 1 (free partitions P_g)
+    indexing     — bin-level solution -> concrete slice indexes
+    wpm_mip      — the WPM mixed-integer program (Eqns 2a-2k)
+    heuristic    — Sec-4.2 rule-based placement (3 use cases)
+    baselines    — first-fit / load-balanced schedulers
+    patterns     — beyond-paper pattern-enumeration exact solver
+    metrics      — Table-3 evaluation metrics
+    migration    — migration planning (one-shot vs sequential)
+    simulator    — Sec-5.1 random test-case generation
+"""
+from .profiles import A100_80GB, H100_96GB, DeviceModel, Profile  # noqa: F401
+from .state import ClusterState, GPUState, Placement, Workload  # noqa: F401

@@ -1,0 +1,121 @@
+"""Migration planner (framework component 2, Fig. 1; future-work item 1).
+
+Given an initial and a final ClusterState, derive an executable plan:
+ordered *waves* of moves where every move in a wave can run simultaneously
+(its destination span is free once the previous waves completed).  Moves
+whose destinations are free in the initial state form wave 0 — these are the
+paper's non-disruptive one-shot migrations.  Cyclic dependencies (A waits on
+B waits on A) are broken by marking one move per cycle *disruptive* (the
+workload must be drained before redeployment), mirroring the paper's
+discussion of Figure 4 -> Figure 5 without free GPUs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Set, Tuple
+
+from .state import ClusterState, Placement
+
+__all__ = ["Move", "MigrationPlan", "plan_migration"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Move:
+    wid: str
+    src_gid: Optional[str]  # None for a brand-new workload
+    src_index: Optional[int]
+    dst_gid: str
+    dst_index: int
+    profile_id: int
+    disruptive: bool = False
+
+
+@dataclasses.dataclass
+class MigrationPlan:
+    waves: List[List[Move]]
+    disruptive: List[Move]
+
+    @property
+    def n_moves(self) -> int:
+        return sum(len(w) for w in self.waves) + len(self.disruptive)
+
+    @property
+    def n_sequential(self) -> int:
+        """Moves that could not run in wave 0 (paper's sequential metric)."""
+        return self.n_moves - (len(self.waves[0]) if self.waves else 0)
+
+
+def _span(state: ClusterState, gid: str, pl: Placement) -> Set[Tuple[str, int]]:
+    device = state.gpus[gid].device
+    mem, _ = device.profile(pl.profile_id).span(pl.index, device.n_gpu_slices)
+    return {(gid, pos) for pos in mem}
+
+
+def plan_migration(initial: ClusterState, final: ClusterState) -> MigrationPlan:
+    """Topologically order the moves needed to reach ``final`` from ``initial``."""
+    moves: Dict[str, Move] = {}
+    src_spans: Dict[str, Set[Tuple[str, int]]] = {}
+    dst_spans: Dict[str, Set[Tuple[str, int]]] = {}
+
+    for gid, gpu in final.gpus.items():
+        for pl in gpu.placements:
+            src = initial.placement_of(pl.wid)
+            if src is not None:
+                src_gid, src_pl = src
+                if src_gid == gid and src_pl.index == pl.index:
+                    continue  # unmoved
+                mv = Move(pl.wid, src_gid, src_pl.index, gid, pl.index, pl.profile_id)
+                src_spans[pl.wid] = _span(initial, src_gid, src_pl)
+            else:
+                mv = Move(pl.wid, None, None, gid, pl.index, pl.profile_id)
+                src_spans[pl.wid] = set()
+            moves[pl.wid] = mv
+            dst_spans[pl.wid] = _span(final, gid, pl)
+
+    # Slices occupied in the initial state by workloads that are NOT moving
+    # (and not being removed) permanently block their span.
+    moving = set(moves)
+    final_wids = {p.wid for g in final.gpus.values() for p in g.placements}
+    blocked: Set[Tuple[str, int]] = set()
+    for gid, gpu in initial.gpus.items():
+        for pl in gpu.placements:
+            if pl.wid not in moving and pl.wid in final_wids:
+                blocked |= _span(initial, gid, pl)
+
+    # Dependency edges: move a depends on move b iff a's destination overlaps
+    # b's initial span (b must vacate before a lands).
+    deps: Dict[str, Set[str]] = {w: set() for w in moves}
+    for a in moves:
+        if dst_spans[a] & blocked:
+            # Destination overlaps an immovable placement: infeasible final
+            # state; treat as disruptive (should not happen for valid plans).
+            pass
+        for b in moves:
+            if a != b and dst_spans[a] & src_spans[b]:
+                deps[a].add(b)
+
+    # Kahn's algorithm into waves; break cycles disruptively.
+    waves: List[List[Move]] = []
+    disruptive: List[Move] = []
+    remaining = dict(deps)
+    done: Set[str] = set()
+    while remaining:
+        ready = sorted(w for w, d in remaining.items() if d <= done)
+        if not ready:
+            # cycle: evict the workload with the smallest footprint (cheapest
+            # to drain) and retry.
+            victim = min(
+                remaining,
+                key=lambda w: (len(dst_spans[w]), w),
+            )
+            disruptive.append(dataclasses.replace(moves[victim], disruptive=True))
+            done.add(victim)
+            del remaining[victim]
+            continue
+        waves.append([moves[w] for w in ready])
+        for w in ready:
+            done.add(w)
+            del remaining[w]
+    if not waves:
+        waves = [[]]
+    return MigrationPlan(waves=waves, disruptive=disruptive)

@@ -1,0 +1,241 @@
+"""Cluster state model: workloads, placements, GPUs (paper Sec 2.1).
+
+A *workload* is one replica of an LLM-inferencing deployment, matched to a
+partition profile.  A *configuration* (paper terminology) is the set of
+partitions + workload assignments on a GPU; here a ``GPUState`` holds the
+placements directly (partition == placement, since under DRA a partition is
+created per workload placement).
+"""
+from __future__ import annotations
+
+import copy
+import dataclasses
+from typing import Dict, Iterable, List, Optional, Tuple
+
+from .profiles import A100_80GB, DeviceModel, Profile
+
+__all__ = ["Workload", "Placement", "GPUState", "ClusterState"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Workload:
+    """One model replica to be hosted in a MIG partition."""
+
+    wid: str
+    profile_id: int
+    #: model tag, used by the serving layer; irrelevant to placement math.
+    model: str = ""
+    #: per-workload placement reward p_w and migration penalty gamma^M_w.
+    reward: float = 100.0
+    migration_cost: float = 1.0
+
+    def profile(self, device: DeviceModel = A100_80GB) -> Profile:
+        return device.profile(self.profile_id)
+
+
+@dataclasses.dataclass(frozen=True)
+class Placement:
+    """A workload placed at a concrete slice index on a GPU."""
+
+    wid: str
+    profile_id: int
+    index: int
+
+    def spans(self, device: DeviceModel) -> Tuple[range, range]:
+        return device.profile(self.profile_id).span(self.index, device.n_gpu_slices)
+
+
+@dataclasses.dataclass
+class GPUState:
+    """One GPU (bin) with its current placements."""
+
+    gid: str
+    device: DeviceModel = A100_80GB
+    placements: List[Placement] = dataclasses.field(default_factory=list)
+
+    # ---- occupancy -------------------------------------------------------
+    def memory_occupancy(self) -> List[Optional[str]]:
+        """memory position -> wid or None."""
+        occ: List[Optional[str]] = [None] * self.device.n_memory_slices
+        for pl in self.placements:
+            mem, _ = pl.spans(self.device)
+            for pos in mem:
+                if occ[pos] is not None:
+                    raise ValueError(
+                        f"{self.gid}: overlapping placements at memory pos {pos}"
+                    )
+                occ[pos] = pl.wid
+        return occ
+
+    def gpu_slice_occupancy(self) -> List[Optional[str]]:
+        """GPU slice -> wid or None (positions 0..n_gpu_slices-1)."""
+        return self.memory_occupancy()[: self.device.n_gpu_slices]
+
+    def free_gpu_slices(self) -> List[int]:
+        return [i for i, w in enumerate(self.gpu_slice_occupancy()) if w is None]
+
+    def used_compute_slices(self) -> int:
+        return sum(
+            self.device.profile(p.profile_id).compute_slices for p in self.placements
+        )
+
+    def used_memory_slices(self) -> int:
+        return sum(
+            self.device.profile(p.profile_id).memory_slices for p in self.placements
+        )
+
+    def media_extensions_used(self) -> int:
+        return sum(
+            self.device.profile(p.profile_id).media_extensions
+            for p in self.placements
+        )
+
+    def is_empty(self) -> bool:
+        return not self.placements
+
+    # ---- feasibility -----------------------------------------------------
+    def can_place_at(self, profile: Profile, index: int) -> bool:
+        """Is placing ``profile`` at ``index`` feasible in the current state?"""
+        if index not in profile.allowed_indexes:
+            return False
+        mem, _ = profile.span(index, self.device.n_gpu_slices)
+        if mem.stop > self.device.n_memory_slices:
+            return False
+        occ = self.memory_occupancy()
+        if any(occ[pos] is not None for pos in mem):
+            return False
+        if (
+            profile.media_extensions
+            and self.media_extensions_used() + profile.media_extensions
+            > self.device.max_media_extensions
+        ):
+            return False
+        return True
+
+    def first_feasible_index(
+        self, profile: Profile, order: Optional[Iterable[int]] = None
+    ) -> Optional[int]:
+        """First feasible index in ``order`` (default: Table-1 preference)."""
+        for idx in profile.allowed_indexes if order is None else order:
+            if self.can_place_at(profile, idx):
+                return idx
+        return None
+
+    def place(self, wid: str, profile_id: int, index: int) -> Placement:
+        profile = self.device.profile(profile_id)
+        if not self.can_place_at(profile, index):
+            raise ValueError(f"{self.gid}: cannot place {profile.name} at {index}")
+        pl = Placement(wid, profile_id, index)
+        self.placements.append(pl)
+        return pl
+
+    def remove(self, wid: str) -> Placement:
+        for i, pl in enumerate(self.placements):
+            if pl.wid == wid:
+                return self.placements.pop(i)
+        raise KeyError(f"{self.gid}: workload {wid} not placed here")
+
+    # ---- wastage (index-level; Table 3 semantics) -------------------------
+    def compute_waste(self) -> int:
+        """GPU slices blocked by placements but not backed by compute."""
+        return sum(
+            self.device.profile(p.profile_id).compute_waste_at(
+                p.index, self.device.n_gpu_slices
+            )
+            for p in self.placements
+        )
+
+    def memory_waste(self) -> int:
+        """Stranded extra memory position (m7 unusable; paper 3.2.3)."""
+        if not self.device.extra_memory:
+            return 0
+        occ = self.memory_occupancy()
+        last_gpu_slice = self.device.n_gpu_slices - 1  # slice 6
+        extra_pos = self.device.n_memory_slices - 1  # m7
+        holder = occ[last_gpu_slice]
+        if holder is not None and occ[extra_pos] is None:
+            # slice 6 is held by a partition that does not extend into m7
+            # (e.g. profile 19 at index 6) -> m7 is unusable.
+            return 1
+        return 0
+
+    def joint_slice_utilization(self) -> float:
+        """(s_m + s_c) / (S_m + S_c) — heuristic GPU sort key (Sec 4.2)."""
+        s_m, s_c = self.used_memory_slices(), self.used_compute_slices()
+        return (s_m + s_c) / (self.device.n_memory_slices + self.device.n_gpu_slices)
+
+    def clone(self) -> "GPUState":
+        return GPUState(self.gid, self.device, list(self.placements))
+
+
+@dataclasses.dataclass
+class ClusterState:
+    """A cluster of (possibly heterogeneous) MIG-capable GPUs."""
+
+    gpus: Dict[str, GPUState] = dataclasses.field(default_factory=dict)
+    workloads: Dict[str, Workload] = dataclasses.field(default_factory=dict)
+
+    @classmethod
+    def homogeneous(
+        cls, n_gpus: int, device: DeviceModel = A100_80GB, prefix: str = "gpu"
+    ) -> "ClusterState":
+        return cls(
+            gpus={
+                f"{prefix}{i}": GPUState(f"{prefix}{i}", device)
+                for i in range(n_gpus)
+            }
+        )
+
+    # ---- lookups ----------------------------------------------------------
+    def gpu_of(self, wid: str) -> Optional[str]:
+        for gid, gpu in self.gpus.items():
+            if any(p.wid == wid for p in gpu.placements):
+                return gid
+        return None
+
+    def placement_of(self, wid: str) -> Optional[Tuple[str, Placement]]:
+        for gid, gpu in self.gpus.items():
+            for p in gpu.placements:
+                if p.wid == wid:
+                    return gid, p
+        return None
+
+    def used_gpus(self) -> List[GPUState]:
+        return [g for g in self.gpus.values() if not g.is_empty()]
+
+    def free_gpus(self) -> List[GPUState]:
+        return [g for g in self.gpus.values() if g.is_empty()]
+
+    def placed_workloads(self) -> List[Workload]:
+        out = []
+        for gpu in self.gpus.values():
+            for p in gpu.placements:
+                out.append(self.workloads[p.wid])
+        return out
+
+    def ordered_gids(self) -> List[str]:
+        return sorted(self.gpus.keys())
+
+    def add_workload(self, w: Workload) -> None:
+        self.workloads[w.wid] = w
+
+    def place(self, wid: str, gid: str, index: int) -> Placement:
+        w = self.workloads[wid]
+        return self.gpus[gid].place(wid, w.profile_id, index)
+
+    def clone(self) -> "ClusterState":
+        return ClusterState(
+            gpus={gid: g.clone() for gid, g in self.gpus.items()},
+            workloads=dict(self.workloads),
+        )
+
+    def validate(self) -> None:
+        """Raise if any GPU has overlapping/illegal placements."""
+        for gpu in self.gpus.values():
+            gpu.memory_occupancy()
+            for p in gpu.placements:
+                prof = gpu.device.profile(p.profile_id)
+                if p.index not in prof.allowed_indexes:
+                    raise ValueError(
+                        f"{gpu.gid}: {prof.name} at illegal index {p.index}"
+                    )

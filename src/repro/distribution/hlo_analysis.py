@@ -1,0 +1,417 @@
+"""Static analyzer for post-SPMD optimized HLO text.
+
+Why: ``compiled.cost_analysis()`` on the CPU backend does NOT multiply
+``while``-loop bodies by their trip count, so a scan-over-layers model
+reports one layer's FLOPs.  This analyzer parses the optimized HLO module,
+walks the call graph (entry -> fusions/whiles/calls) with trip-count
+multipliers recovered from loop conditions, and accumulates:
+
+  * flops             — 2*M*N*K for dots (+ conv), 1/elem for arithmetic
+  * bytes             — operands+result of top-level (post-fusion) ops,
+                        fusion interiors excluded (VMEM-resident)
+  * collective bytes  — per collective kind, operand sizes summed
+
+Because the input is the post-partitioning module, every quantity is
+PER-DEVICE; multiply by device count for cluster totals.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16, "token": 0,
+    "s2": 1, "u2": 1,
+}
+
+COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_ARITH = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "abs",
+    "exponential", "log", "tanh", "rsqrt", "sqrt", "power", "negate",
+    "cosine", "sine", "logistic", "select", "compare", "floor", "ceil",
+    "round-nearest-afz", "round-nearest-even", "clamp", "remainder",
+    "exponential-minus-one", "log-plus-one", "sign", "atan2", "erf",
+}
+
+_SKIP_BYTES = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "bitcast-convert", "after-all", "partition-id", "replica-id", "iota",
+}
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    opcode: str
+    result_bytes: int
+    result_elems: int
+    operands: List[str]
+    called: List[str]
+    attrs: str
+    shape_str: str
+    args_text: str = ""
+
+
+@dataclasses.dataclass
+class Totals:
+    flops: float = 0.0
+    bytes: float = 0.0
+    #: bytes inside ``jax.named_scope("pallas_*")`` regions — intermediates
+    #: (attention scores/probs, SSD chunk products) that the real Pallas
+    #: kernel keeps in VMEM.  On TPU these never touch HBM; the kernelized
+    #: memory roofline term is (bytes - kernel_bytes) / HBM_bw.
+    kernel_bytes: float = 0.0
+    collective_bytes: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def add(self, other: "Totals", mult: float = 1.0) -> None:
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        self.kernel_bytes += other.kernel_bytes * mult
+        for k, v in other.collective_bytes.items():
+            self.collective_bytes[k] = self.collective_bytes.get(k, 0.0) + v * mult
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return sum(self.collective_bytes.values())
+
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*(?:\([^)]*\))?\s*->.*\{\s*$")
+_COMMENT_RE = re.compile(r"/\*.*?\*/")
+
+
+def _parse_instr_line(line: str):
+    """'%name = TYPE opcode(operands), attrs' -> (name, type, opcode, rest)."""
+    s = _COMMENT_RE.sub("", line).strip()
+    if s.startswith("ROOT "):
+        s = s[5:]
+    if not s.startswith("%") and not s[:1].isalpha():
+        return None
+    eq = s.find(" = ")
+    if eq < 0:
+        return None
+    name = s[:eq].strip().lstrip("%")
+    rhs = s[eq + 3 :].lstrip()
+    # TYPE: tuple '(...)' or single token
+    if rhs.startswith("("):
+        depth = 0
+        for i, c in enumerate(rhs):
+            if c == "(":
+                depth += 1
+            elif c == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+        type_str = rhs[: i + 1]
+        rest = rhs[i + 1 :].lstrip()
+    else:
+        sp = rhs.find(" ")
+        if sp < 0:
+            return None
+        type_str = rhs[:sp]
+        rest = rhs[sp + 1 :].lstrip()
+    par = rest.find("(")
+    if par < 0:
+        return None
+    opcode = rest[:par].strip()
+    if not re.fullmatch(r"[\w\-]+", opcode or ""):
+        return None
+    return name, type_str, opcode, rest[par + 1 :]
+
+
+def _shape_bytes(type_str: str) -> Tuple[int, int]:
+    """(bytes, elements) of a possibly-tuple HLO type string."""
+    total_b = 0
+    total_e = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        elems = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    elems *= int(d)
+        total_b += elems * _DTYPE_BYTES[dt]
+        total_e += elems
+    return total_b, total_e
+
+
+def _split_operands(argstr: str) -> Tuple[List[str], str, str]:
+    """Operand names from the call parens; remainder = attribute string."""
+    depth = 1
+    i = 0
+    while i < len(argstr) and depth:
+        c = argstr[i]
+        if c == "(":
+            depth += 1
+        elif c == ")":
+            depth -= 1
+        i += 1
+    inner = argstr[: i - 1] if depth == 0 else argstr
+    attrs = argstr[i:] if depth == 0 else ""
+    ops = re.findall(r"%([\w\.\-]+)", inner)
+    return ops, attrs, inner
+
+
+class HloModule:
+    def __init__(self, text: str):
+        self.comps: Dict[str, List[Instr]] = {}
+        self._parse(text)
+        self._memo: Dict[str, Totals] = {}
+
+    # ---- parsing ------------------------------------------------------------
+    def _parse(self, text: str) -> None:
+        cur: Optional[str] = None
+        for line in text.splitlines():
+            # computation headers start at column 0 and end with '{'
+            if (
+                line
+                and not line[0].isspace()
+                and line.rstrip().endswith("{")
+                and "->" in line
+            ):
+                hm = re.match(r"^(?:ENTRY\s+)?%?([\w\.\-]+)", line)
+                if hm:
+                    cur = hm.group(1)
+                    self.comps[cur] = []
+                    continue
+            if cur is None:
+                continue
+            if line.strip() == "}":
+                cur = None
+                continue
+            parsed = _parse_instr_line(line)
+            if parsed is None:
+                continue
+            name, type_str, opcode, rest = parsed
+            rb, re_ = _shape_bytes(type_str)
+            operands, attrs, inner = _split_operands(rest)
+            called = re.findall(
+                r"(?:calls|body|condition|to_apply)=\{?%?([\w\.\-]+)", attrs
+            )
+            if "branch_computations" in attrs:
+                called += re.findall(
+                    r"%([\w\.\-]+)",
+                    attrs.split("branch_computations=")[1].split("}")[0],
+                )
+            self.comps[cur].append(
+                Instr(name, opcode, rb, re_, operands, called, attrs, type_str, inner)
+            )
+
+    # ---- trip counts ----------------------------------------------------------
+    def _trip_count_from_config(self, ins: Instr) -> Optional[int]:
+        m = re.search(r'known_trip_count[^0-9]*"n"[^0-9]*(\d+)', ins.attrs)
+        return int(m.group(1)) if m else None
+
+    def _trip_count(self, cond_comp: str) -> int:
+        """Fallback: constant operand of the loop-condition compare."""
+        instrs = self.comps.get(cond_comp, [])
+        consts: Dict[str, int] = {}
+        for ins in instrs:
+            if ins.opcode == "constant":
+                cm = re.search(r"^\s*(-?\d+)\s*$", ins.args_text.strip())
+                if cm:
+                    consts[ins.name] = int(cm.group(1))
+        trip = 1
+        for ins in instrs:
+            if ins.opcode in ("compare", "fusion"):
+                for op in ins.operands:
+                    if op in consts and consts[op] > 0:
+                        trip = max(trip, consts[op])
+        return trip
+
+    # ---- cost walk -------------------------------------------------------------
+    def _instr_flops(self, ins: Instr, defs: Dict[str, Instr]) -> float:
+        if ins.opcode == "dot":
+            k = 1
+            cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.attrs)
+            if cm and ins.operands:
+                lhs = defs.get(ins.operands[0])
+                if lhs is not None:
+                    dims_m = _SHAPE_RE.findall(lhs.shape_str)
+                    if dims_m:
+                        lhs_dims = [int(d) for d in dims_m[0][1].split(",") if d]
+                        for c in cm.group(1).split(","):
+                            if c and int(c) < len(lhs_dims):
+                                k *= lhs_dims[int(c)]
+            return 2.0 * ins.result_elems * k
+        if ins.opcode == "convolution":
+            # depthwise k-tap convs only in this codebase
+            return 2.0 * ins.result_elems * 4
+        if ins.opcode in _ARITH:
+            return float(ins.result_elems)
+        if ins.opcode == "reduce":
+            return float(ins.result_elems)
+        return 0.0
+
+    _PASSTHROUGH = ("copy", "bitcast", "transpose", "convert", "reshape")
+
+    def _root_def(self, name: str, defs: Dict[str, Instr]) -> Optional[Instr]:
+        """Follow single-input pass-through ops back to the real producer."""
+        seen = 0
+        d = defs.get(name)
+        while d is not None and d.opcode in self._PASSTHROUGH and d.operands and seen < 8:
+            d = defs.get(d.operands[0])
+            seen += 1
+        return d
+
+    def _fusion_bytes(self, ins: Instr, defs: Dict[str, Instr]) -> float:
+        """Fusion boundary traffic with loop-carry awareness.
+
+        A scan body's cache/state update fuses a dynamic-update-slice over a
+        loop-carried buffer: XLA aliases the buffer in place, so the step
+        touches only the written region — charging the full stacked KV cache
+        per layer would inflate decode traffic ~1000x.  Similarly a fusion
+        that slice-READS a big carried buffer touches at most result-size
+        bytes of it."""
+        res = ins.result_bytes
+        infos = []
+        for o in ins.operands:
+            d = defs.get(o)
+            if d is None:
+                continue
+            root = self._root_def(o, defs)
+            carried = root is not None and root.opcode in (
+                "parameter", "get-tuple-element",
+            )
+            infos.append((d, carried))
+        aliased = False
+        for d, carried in infos:
+            if carried and d.shape_str == ins.shape_str:
+                aliased = True  # in-place update of the carried buffer
+                break
+        upd = max((d.result_bytes for d, c in infos if not c), default=res)
+        clamp = upd if aliased else res  # DUS fusions touch ~update-size
+        ob = 0.0
+        skipped_alias = False
+        for d, carried in infos:
+            b = d.result_bytes
+            if carried and d.shape_str == ins.shape_str and not skipped_alias:
+                skipped_alias = True
+                continue
+            if carried and clamp and b > clamp:
+                b = clamp  # slice-read of a larger carried buffer
+            ob += b
+        # aliased in-place update writes ~the update region (~other operands)
+        return ob + (ob if aliased else res)
+
+    def _instr_bytes(self, ins: Instr, defs: Dict[str, Instr]) -> float:
+        """HBM traffic model per op.  In-place updates (XLA aliases donated
+        buffers) touch only the written region; gathers read only the rows
+        they fetch — counting the full backing buffer per op would charge a
+        32k-token KV cache per appended token."""
+        op_bytes = [defs[o].result_bytes for o in ins.operands if o in defs]
+        if ins.opcode == "copy" and ins.operands:
+            root = self._root_def(ins.operands[0], defs)
+            if root is not None and root.opcode in ("parameter", "get-tuple-element"):
+                return 0.0  # alias copy of a donated/carried buffer
+        if ins.opcode == "dynamic-update-slice":
+            upd = op_bytes[1] if len(op_bytes) > 1 else 0
+            return 2.0 * upd  # read update + write region (in-place)
+        if ins.opcode == "scatter":
+            upd = op_bytes[2] if len(op_bytes) > 2 else ins.result_bytes
+            idx = op_bytes[1] if len(op_bytes) > 1 else 0
+            return 2.0 * upd + idx
+        if ins.opcode == "gather":
+            idx = op_bytes[1] if len(op_bytes) > 1 else 0
+            return 2.0 * ins.result_bytes + idx  # read rows + write result
+        if ins.opcode == "dynamic-slice":
+            return 2.0 * ins.result_bytes
+        return ins.result_bytes + sum(op_bytes)
+
+    def _comp_totals(self, comp: str) -> Totals:
+        if comp in self._memo:
+            return self._memo[comp]
+        t = Totals()
+        self._memo[comp] = t  # guards recursion
+        instrs = self.comps.get(comp, [])
+        defs = {i.name: i for i in instrs}
+
+        # Scope-mark bookkeeping: compiler-synthesized ops (layout copies,
+        # transposed dots) drop the named_scope metadata.  If the majority of
+        # a computation's direct bytes carry the pallas_* mark, the stripped
+        # siblings in the same loop body are kernel-interior too.
+        direct: list = []  # (bytes, marked) per direct op
+        sub_marked: list = []  # deferred subtree kernel-bytes adjustments
+
+        for ins in instrs:
+            marked = "pallas_" in ins.attrs  # inside a kernel named_scope
+            if ins.opcode == "fusion":
+                # boundary bytes; interior flops
+                fb = self._fusion_bytes(ins, defs)
+                t.bytes += fb
+                direct.append((fb, marked))
+                if marked:
+                    t.kernel_bytes += fb
+                for callee in ins.called:
+                    t.add(self._comp_totals_flops_only(callee))
+                continue
+            if ins.opcode == "while":
+                body_cond = ins.called
+                trip = self._trip_count_from_config(ins)
+                if trip is None:
+                    trip = 1
+                    for c in body_cond:
+                        trip = max(trip, self._trip_count(c))
+                for c in body_cond:
+                    sub = self._comp_totals(c)
+                    t.add(sub, mult=trip)
+                    if marked:
+                        # whole loop lives inside the kernel scope
+                        t.kernel_bytes += (sub.bytes - sub.kernel_bytes) * trip
+                continue
+            if ins.opcode in ("call", "conditional", "custom-call", "map", "sort", "reduce", "scatter", "select-and-scatter", "reduce-window"):
+                for callee in ins.called:
+                    sub = self._comp_totals(callee)
+                    t.add(sub)
+                    if marked:
+                        t.kernel_bytes += sub.bytes - sub.kernel_bytes
+            # flops + bytes for this op
+            t.flops += self._instr_flops(ins, defs)
+            if ins.opcode not in _SKIP_BYTES:
+                ob = self._instr_bytes(ins, defs)
+                t.bytes += ob
+                direct.append((ob, marked))
+                if marked:
+                    t.kernel_bytes += ob
+            base = ins.opcode.replace("-start", "").replace("-done", "")
+            if base in COLLECTIVES and not ins.opcode.endswith("-done"):
+                ob = sum(defs[o].result_bytes for o in ins.operands if o in defs)
+                if ob == 0:
+                    ob = ins.result_bytes
+                t.collective_bytes[base] = t.collective_bytes.get(base, 0.0) + ob
+
+        tot_direct = sum(b for b, _ in direct)
+        mk_direct = sum(b for b, m in direct if m)
+        if tot_direct and mk_direct >= 0.5 * tot_direct:
+            t.kernel_bytes += tot_direct - mk_direct  # claim stripped siblings
+        return t
+
+    def _comp_totals_flops_only(self, comp: str) -> Totals:
+        full = self._comp_totals(comp)
+        return Totals(flops=full.flops, bytes=0.0, collective_bytes=dict(full.collective_bytes))
+
+    def entry_totals(self) -> Totals:
+        # entry computation: the one never called by others, or named 'main'
+        called = set()
+        for comp, instrs in self.comps.items():
+            for ins in instrs:
+                called.update(ins.called)
+        entries = [c for c in self.comps if c not in called]
+        main = [c for c in entries if "main" in c] or entries
+        t = Totals()
+        for comp in main[:1] if main else []:
+            t.add(self._comp_totals(comp))
+        return t
+
+
+def analyze(hlo_text: str) -> Totals:
+    return HloModule(hlo_text).entry_totals()

@@ -1,0 +1,278 @@
+"""Sharding rules: logical activation axes + path-based parameter specs.
+
+The model code annotates activations with *logical* axis names via
+``constrain`` (no-op outside a mesh context).  A ``ShardingContext`` binds a
+mesh plus logical->mesh rules; parameter shardings are derived from the
+parameter path with ``param_specs`` (MaxText-style rules, computed rather
+than declared per layer).
+
+Modes:
+  * tp     : tensor parallel over 'model' only; params replicated over data
+  * fsdp   : tp + params/optimizer fully sharded over ('pod','data') too
+             (ZeRO-3 style; required to fit the 100B+ archs on v5e)
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_STATE = threading.local()
+
+#: logical activation axis -> mesh axes (None = replicated)
+DEFAULT_RULES: Dict[str, Any] = {
+    "batch": ("pod", "data"),
+    "seq": None,  # flipped to 'model' when sequence parallelism is on
+    "heads": "model",
+    "kv_heads": "model",
+    "mlp": "model",
+    "vocab": "model",
+    "experts": "model",
+}
+
+
+def _mesh_axes(mesh: Mesh, want) -> Optional[Any]:
+    if want is None:
+        return None
+    if isinstance(want, str):
+        return want if want in mesh.axis_names else None
+    present = tuple(a for a in want if a in mesh.axis_names)
+    return present if present else None
+
+
+@contextlib.contextmanager
+def use_mesh(
+    mesh: Mesh,
+    rules: Optional[Dict[str, Any]] = None,
+    *,
+    sequence_parallel: bool = False,
+    fsdp: bool = True,
+):
+    r = dict(DEFAULT_RULES)
+    if rules:
+        r.update(rules)
+    if sequence_parallel:
+        r["seq"] = "model"
+    prev = getattr(_STATE, "ctx", None)
+    _STATE.ctx = {"mesh": mesh, "rules": r, "fsdp": fsdp}
+    try:
+        with mesh:
+            yield
+    finally:
+        _STATE.ctx = prev
+
+
+def current() -> Optional[dict]:
+    return getattr(_STATE, "ctx", None)
+
+
+def constrain(x, logical_axes: Sequence[Optional[str]]):
+    ctx = current()
+    if ctx is None:
+        return x
+    if getattr(x, "ndim", None) != len(logical_axes):
+        return x  # rank mismatch: caller's annotation doesn't apply here
+    mesh, rules = ctx["mesh"], ctx["rules"]
+    spec = []
+    used: set = set()
+    for i, ax in enumerate(logical_axes):
+        m = _mesh_axes(mesh, rules.get(ax)) if ax else None
+        # a mesh axis may appear once per spec; first logical axis wins
+        if m is not None:
+            flat = (m,) if isinstance(m, str) else tuple(m)
+            flat = tuple(a for a in flat if a not in used)
+            used.update(flat)
+            m = None if not flat else (flat[0] if len(flat) == 1 else flat)
+        # dimension must be divisible by the mesh axes' total size
+        if m is not None:
+            flat = (m,) if isinstance(m, str) else tuple(m)
+            total = 1
+            for a in flat:
+                total *= mesh.shape[a]
+            if x.shape[i] % total != 0:
+                used.difference_update(flat)
+                m = None
+        spec.append(m)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*spec)))
+
+
+# ---------------------------------------------------------------------------
+# parameter specs by path
+# ---------------------------------------------------------------------------
+_COL_SHARDED = ("wq", "wk", "wv", "w_gate", "w_up", "w_in", "wq_b", "wkv_b")
+_ROW_SHARDED = ("wo", "w_out")
+_REPLICATED = ("scale", "bias", "q_norm", "kv_norm", "a_log", "dt_bias", "router")
+
+
+def _spec_for(path: Tuple[str, ...], shape: Tuple[int, ...], mesh: Mesh, fsdp: bool):
+    """Map one parameter to a PartitionSpec by its path leaf + shape.
+
+    NOTE: scan-stacked layer params carry a leading L dim, so the tensor-
+    parallel rules address the TRAILING dims (row = -2, col = -1) and the
+    expert rule finds the expert-count dim among the leading dims.
+    """
+    leaf = path[-1]
+    nd = len(shape)
+    parts: list = [None] * nd
+    model_ok = "model" in mesh.axis_names
+    msize = mesh.shape.get("model", 1)
+
+    def fits(dim: int) -> bool:
+        return shape[dim] % msize == 0 and shape[dim] >= msize
+
+    is_expert = any("expert" in p for p in path)
+    if is_expert and nd >= 3:
+        # (..., E, d_in, d_out): expert-parallel on the expert dim.
+        if model_ok:
+            for i in range(nd - 2):
+                if fits(i):
+                    parts[i] = "model"
+                    break
+    elif leaf == "embedding" or leaf == "patch_proj" or "embed" in leaf:
+        if model_ok and fits(0):
+            parts[0] = "model"  # vocab-sharded embedding
+    elif any(leaf.startswith(k) or leaf == k for k in _ROW_SHARDED):
+        if model_ok and nd >= 2 and fits(nd - 2):
+            parts[nd - 2] = "model"
+    elif any(leaf.startswith(k) or leaf == k for k in _COL_SHARDED):
+        if model_ok and nd >= 2 and fits(nd - 1):
+            parts[nd - 1] = "model"
+    elif any(k in leaf for k in _REPLICATED) or nd <= 1:
+        pass
+    elif nd >= 2:
+        if model_ok and fits(nd - 1):
+            parts[nd - 1] = "model"
+
+    if fsdp:
+        # ZeRO-3: additionally shard the largest remaining free dim over the
+        # data axes so params+grads+optimizer state divide across all chips.
+        data_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+        if data_axes:
+            dsize = int(np.prod([mesh.shape[a] for a in data_axes]))
+            free = [
+                i
+                for i in range(len(shape))
+                if parts[i] is None and shape[i] % dsize == 0 and shape[i] >= dsize
+            ]
+            if free:
+                j = max(free, key=lambda i: shape[i])
+                parts[j] = data_axes if len(data_axes) > 1 else data_axes[0]
+    return P(*parts)
+
+
+def param_specs(params: Any, mesh: Mesh, fsdp: Optional[bool] = None) -> Any:
+    """Pytree of PartitionSpec matching ``params`` (arrays or ShapeDtypeStructs)."""
+    if fsdp is None:
+        ctx = current()
+        fsdp = ctx["fsdp"] if ctx else True
+
+    def walk(node, path):
+        if isinstance(node, dict):
+            return {k: walk(v, path + (str(k),)) for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            t = [walk(v, path + (str(i),)) for i, v in enumerate(node)]
+            return type(node)(t)
+        shape = tuple(node.shape)
+        return _spec_for(path, shape, mesh, fsdp)
+
+    return walk(params, ())
+
+
+def named(tree: Any, mesh: Mesh) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        tree,
+        is_leaf=lambda s: isinstance(s, P),
+    )
+
+
+# ---------------------------------------------------------------------------
+# optimizer-state specs: moments inherit the parameter sharding
+# ---------------------------------------------------------------------------
+def opt_state_specs(params: Any, opt_state: Any, mesh: Mesh, fsdp: bool = True) -> Any:
+    pspecs = param_specs(params, mesh, fsdp)
+
+    def is_q8(n):
+        return isinstance(n, dict) and set(n) == {"q", "scale"}
+
+    def moment(spec, node):
+        if is_q8(node):
+            row = spec[0] if len(spec) else None
+            scale_rows = node["scale"].shape[0] if node["scale"].ndim else 1
+            q_rows = node["q"].shape[0] if node["q"].ndim else 1
+            if scale_rows > 1 and scale_rows == q_rows and row is not None:
+                return {"q": spec, "scale": P(row)}
+            return {"q": spec, "scale": P()}
+        return spec
+
+    def map_moments(tree):
+        return jax.tree.map(moment, pspecs, tree, is_leaf=lambda n: is_q8(n))
+
+    return {
+        "m": map_moments(opt_state["m"]),
+        "v": map_moments(opt_state["v"]),
+        "step": P(),
+    }
+
+
+# ---------------------------------------------------------------------------
+# cache/batch specs (serving): divisibility-driven heuristic
+# ---------------------------------------------------------------------------
+def batch_specs(batch: Any, mesh: Mesh) -> Any:
+    """Shard dim0 (batch) over the data-like axes when divisible."""
+    daxes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dsize = int(np.prod([mesh.shape[a] for a in daxes])) if daxes else 1
+
+    def spec(x):
+        parts = [None] * len(x.shape)
+        if daxes and x.shape and x.shape[0] % dsize == 0 and x.shape[0] >= dsize:
+            parts[0] = daxes if len(daxes) > 1 else daxes[0]
+        return P(*parts)
+
+    return jax.tree.map(spec, batch)
+
+
+def cache_specs(cache: Any, mesh: Mesh, batch_size: int) -> Any:
+    """KV caches / recurrent states: batch dim over data axes when divisible,
+    else the longest divisible dim (sequence — flash-decoding style split);
+    'model' on the largest remaining divisible dim (heads / latent)."""
+    daxes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dsize = int(np.prod([mesh.shape[a] for a in daxes])) if daxes else 1
+    msize = mesh.shape.get("model", 1)
+    dval = daxes if len(daxes) > 1 else (daxes[0] if daxes else None)
+
+    def spec(x):
+        shape = tuple(x.shape)
+        parts: list = [None] * len(shape)
+        if not shape:
+            return P()
+        used = set()
+        # data axes: prefer the dim that equals batch_size (skip dim 0 which
+        # is usually the stacked-layer dim for rank>=3 leaves)
+        if daxes and dsize > 1:
+            cand = [
+                i
+                for i in range(len(shape))
+                if shape[i] % dsize == 0 and shape[i] >= dsize
+            ]
+            pref = [i for i in cand if shape[i] == batch_size and i != 0]
+            pick = (pref or sorted(cand, key=lambda i: -shape[i]) or [None])[0]
+            if pick is not None:
+                parts[pick] = dval
+                used.add(pick)
+        if msize > 1 and "model" in mesh.axis_names:
+            cand = [
+                i
+                for i in range(1, len(shape))
+                if i not in used and shape[i] % msize == 0 and shape[i] >= msize
+            ]
+            if cand:
+                pick = sorted(cand, key=lambda i: -shape[i])[0]
+                parts[pick] = "model"
+        return P(*parts)
+
+    return jax.tree.map(spec, cache)

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the perf-critical compute of the served workloads.
+
+kernels:
+  flash_attention  — train/prefill attention (GQA, causal, sliding window)
+  decode_attention — flash-decoding, one token vs long KV (GQA head packing)
+  ssd_scan         — chunked Mamba-2 SSD (MXU matmul formulation)
+
+Each has a pure-jnp oracle in ``ref.py``; ``ops.py`` is the jit'd dispatch
+layer the models call (pallas on TPU / interpret in tests, jnp elsewhere).
+"""
+from . import ops  # noqa: F401

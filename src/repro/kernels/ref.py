@@ -1,0 +1,150 @@
+"""Pure-jnp oracles for every kernel.  Naive, obviously-correct math used by
+the per-kernel allclose sweeps and as the CPU execution path."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+__all__ = ["attention_ref", "decode_attention_ref", "ssd_scan_ref"]
+
+_NEG = -1e30
+
+
+def attention_ref(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    causal: bool = True,
+    sliding_window: Optional[int] = None,
+) -> jnp.ndarray:
+    """q (B,Sq,Hq,D), k/v (B,Sk,Hkv,D) -> (B,Sq,Hq,D); GQA by head grouping.
+
+    Materializes the full score matrix — the oracle, not the fast path.
+    """
+    b, sq, hq, d = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    dv = v.shape[-1]
+    g = hq // hkv
+    qg = q.reshape(b, sq, hkv, g, d).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, kf) / jnp.sqrt(d).astype(jnp.float32)
+    qpos = jnp.arange(sq)[:, None] + (sk - sq)  # align ends (prefill/causal)
+    kpos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if sliding_window is not None:
+        mask &= kpos > qpos - sliding_window
+    scores = jnp.where(mask[None, None, None], scores, _NEG)
+    p = jnp.exp(scores - scores.max(-1, keepdims=True))
+    p = p / p.sum(-1, keepdims=True)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return out.reshape(b, sq, hq, dv).astype(q.dtype)
+
+
+def decode_attention_ref(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    length,
+    sliding_window: Optional[int] = None,
+) -> jnp.ndarray:
+    """One-token decode: q (B,1,Hq,D) vs ring-buffer cache k/v (B,Smax,Hkv,D).
+
+    Valid cache slots are arange(Smax) < length (ring buffers pass
+    length >= Smax once wrapped, making every slot valid — attention is
+    order-invariant so slot order does not matter).  ``length`` may be a
+    scalar (uniform batch) or a (B,) vector (ragged continuous batching).
+    """
+    b, sq, hq, d = q.shape
+    smax, hkv = k.shape[1], k.shape[2]
+    dv = v.shape[-1]
+    g = hq // hkv
+    qg = q.reshape(b, sq, hkv, g, d)
+    # f32 ACCUMULATION over bf16 operands (preferred_element_type), never a
+    # wholesale astype(f32) of k/v — that materializes an f32 shadow of the
+    # entire KV cache, which XLA then carries through the decode loop.
+    scores = jnp.einsum(
+        "bqhgd,bkhd->bhgqk", qg, k, preferred_element_type=jnp.float32
+    )
+    scores = scores / jnp.sqrt(d).astype(jnp.float32)
+    lim = jnp.broadcast_to(jnp.minimum(jnp.asarray(length), smax), (b,))
+    valid = jnp.arange(smax)[None, :] < lim[:, None]  # (B, Smax)
+    scores = jnp.where(valid[:, None, None, None, :], scores, _NEG)
+    p = jnp.exp(scores - scores.max(-1, keepdims=True))
+    p = p / p.sum(-1, keepdims=True)
+    out = jnp.einsum(
+        "bhgqk,bkhd->bqhgd", p.astype(v.dtype), v,
+        preferred_element_type=jnp.float32,
+    )
+    return out.reshape(b, sq, hq, dv).astype(q.dtype)
+
+
+def quantize_kv(k: jnp.ndarray, axis: int = -1):
+    """Per-(token, head) symmetric int8 quantization of a KV tensor.
+
+    k (B,S,Hkv,D) -> (q int8 (B,S,Hkv,D), scale f32 (B,S,Hkv))."""
+    amax = jnp.max(jnp.abs(k.astype(jnp.float32)), axis=axis)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(
+        jnp.round(k.astype(jnp.float32) / scale[..., None]), -127, 127
+    ).astype(jnp.int8)
+    return q, scale
+
+
+def decode_attention_q8_ref(
+    q: jnp.ndarray,  # (B,1,Hq,D)
+    k_q: jnp.ndarray,  # (B,Smax,Hkv,D) int8
+    k_s: jnp.ndarray,  # (B,Smax,Hkv) f32
+    v_q: jnp.ndarray,
+    v_s: jnp.ndarray,
+    length,
+) -> jnp.ndarray:
+    """int8-KV decode oracle: dequantize then run the fp oracle.  The Pallas
+    kernel dequantizes per VMEM tile instead — HBM reads HALVE."""
+    k = k_q.astype(jnp.float32) * k_s[..., None]
+    v = v_q.astype(jnp.float32) * v_s[..., None]
+    return decode_attention_ref(q, k, v, length)
+
+
+def ssd_scan_ref(
+    x: jnp.ndarray,
+    dt: jnp.ndarray,
+    A: jnp.ndarray,
+    B: jnp.ndarray,
+    C: jnp.ndarray,
+    initial_state: Optional[jnp.ndarray] = None,
+):
+    """Mamba-2 SSD, naive sequential recurrence (the oracle).
+
+    x (Bt,S,H,P)  dt (Bt,S,H)  A (H,) negative  B,C (Bt,S,N)
+    state h (Bt,H,P,N):  h_t = exp(A*dt_t) h_{t-1} + dt_t * x_t B_t^T
+                         y_t = h_t C_t
+    Returns y (Bt,S,H,P), final state.
+    """
+    bt, s, h, p = x.shape
+    n = B.shape[-1]
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Bf = B.astype(jnp.float32)
+    Cf = C.astype(jnp.float32)
+    Af = A.astype(jnp.float32)
+    h0 = (
+        jnp.zeros((bt, h, p, n), jnp.float32)
+        if initial_state is None
+        else initial_state.astype(jnp.float32)
+    )
+
+    def step(hprev, t):
+        decay = jnp.exp(Af[None, :] * dtf[:, t])  # (Bt,H)
+        upd = jnp.einsum("bh,bhp,bn->bhpn", dtf[:, t], xf[:, t], Bf[:, t])
+        hnew = hprev * decay[:, :, None, None] + upd
+        y = jnp.einsum("bhpn,bn->bhp", hnew, Cf[:, t])
+        return hnew, y
+
+    import jax
+
+    hT, ys = jax.lax.scan(step, h0, jnp.arange(s))
+    y = jnp.moveaxis(ys, 0, 1)  # (Bt,S,H,P)
+    return y.astype(x.dtype), hT

@@ -1,0 +1,151 @@
+"""Pallas TPU chunked Mamba-2 SSD scan.
+
+TPU adaptation of the GPU SSD algorithm: instead of warp-level parallel
+scans, the sequence is tiled into L-step chunks; within a chunk everything
+is dense (chunk x chunk and chunk x state matmuls on the MXU), and the
+inter-chunk recurrence is the innermost sequential grid dimension carrying
+the (P x N) state in VMEM scratch.  Grid: (batch, heads, chunks).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssd_kernel(
+    a_ref,  # (1,) f32 in SMEM: A for this head
+    x_ref,  # (1, chunk, 1, P)
+    dt_ref,  # (1, chunk, 1)
+    b_ref,  # (1, chunk, N)
+    c_ref,  # (1, chunk, N)
+    h0_ref,  # (1, 1, P, N) initial state
+    y_ref,  # (1, chunk, 1, P)
+    hT_ref,  # (1, 1, P, N) final state
+    state_ref,  # VMEM scratch (P, N)
+    *, chunk: int, n_chunks: int,
+):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = h0_ref[0, 0].astype(jnp.float32)
+
+    A = a_ref[0]
+    x = x_ref[0, :, 0, :].astype(jnp.float32)  # (L, P)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)  # (L,)
+    Bm = b_ref[0].astype(jnp.float32)  # (L, N)
+    Cm = c_ref[0].astype(jnp.float32)  # (L, N)
+
+    la = A * dt  # (L,)
+    cum = jnp.cumsum(la)  # inclusive
+    # intra-chunk: w[t,u] = (C_t.B_u) * exp(cum_t - cum_u) * dt_u,  u <= t
+    seg = cum[:, None] - cum[None, :]
+    tri = (
+        jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+        <= jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    )
+    decay = jnp.where(tri, jnp.exp(seg), 0.0)
+    cb = jax.lax.dot_general(
+        Cm, Bm, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (T,U)
+    w = cb * decay * dt[None, :]
+    y_intra = jax.lax.dot_general(
+        w, x, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (T,P)
+
+    # inter-chunk: y_inter[t] = exp(cum_t) * C_t @ state^T
+    h_prev = state_ref[...]  # (P,N)
+    y_inter = jnp.exp(cum)[:, None] * jax.lax.dot_general(
+        Cm, h_prev, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (T,P)
+    y_ref[0, :, 0, :] = (y_intra + y_inter).astype(y_ref.dtype)
+
+    # state update: h = h*exp(cum_L) + sum_u exp(cum_L - cum_u) dt_u x_u B_u^T
+    tail = jnp.exp(cum[-1] - cum) * dt  # (L,)
+    xw = x * tail[:, None]  # (L,P)
+    upd = jax.lax.dot_general(
+        xw, Bm, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (P,N)
+    state_ref[...] = h_prev * jnp.exp(cum[-1]) + upd
+
+    @pl.when(ci == n_chunks - 1)
+    def _emit_state():
+        hT_ref[0, 0] = state_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan_pallas(
+    x: jnp.ndarray,  # (B, S, H, P)
+    dt: jnp.ndarray,  # (B, S, H) f32
+    A: jnp.ndarray,  # (H,) f32 (negative)
+    B: jnp.ndarray,  # (B, S, N)
+    C: jnp.ndarray,  # (B, S, N)
+    chunk: int = 256,
+    initial_state: Optional[jnp.ndarray] = None,  # (B, H, P, N) f32
+    interpret: bool = False,
+):
+    bt, s, h, p = x.shape
+    n = B.shape[-1]
+    chunk = min(chunk, s)
+    assert s % chunk == 0
+    nc = s // chunk
+    if initial_state is None:
+        initial_state = jnp.zeros((bt, h, p, n), jnp.float32)
+
+    kernel = functools.partial(_ssd_kernel, chunk=chunk, n_chunks=nc)
+    y, hT = pl.pallas_call(
+        kernel,
+        grid=(bt, h, nc),
+        in_specs=[
+            _smem_vec_spec(),
+            pl.BlockSpec((1, chunk, 1, p), lambda b_, h_, c_: (b_, c_, h_, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda b_, h_, c_: (b_, c_, h_)),
+            pl.BlockSpec((1, chunk, n), lambda b_, h_, c_: (b_, c_, 0)),
+            pl.BlockSpec((1, chunk, n), lambda b_, h_, c_: (b_, c_, 0)),
+            pl.BlockSpec((1, 1, p, n), lambda b_, h_, c_: (b_, h_, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, 1, p), lambda b_, h_, c_: (b_, c_, h_, 0)),
+            pl.BlockSpec((1, 1, p, n), lambda b_, h_, c_: (b_, h_, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bt, s, h, p), x.dtype),
+            jax.ShapeDtypeStruct((bt, h, p, n), jnp.float32),
+        ],
+        scratch_shapes=[_vmem((p, n))],
+        compiler_params=_tpu_params(("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(_per_head(A, h), x, dt, B, C, initial_state)
+    return y, hT
+
+
+def _per_head(A, h):
+    return A.astype(jnp.float32).reshape(h)
+
+
+def _vmem(shape):
+    import jax.experimental.pallas.tpu as pltpu
+
+    return pltpu.VMEM(shape, jnp.float32)
+
+
+def _smem_vec_spec():
+    try:
+        import jax.experimental.pallas.tpu as pltpu
+
+        return pl.BlockSpec((1,), lambda b_, h_, c_: (h_,), memory_space=pltpu.SMEM)
+    except Exception:
+        return pl.BlockSpec((1,), lambda b_, h_, c_: (h_,))
+
+
+def _tpu_params(semantics):
+    try:
+        import jax.experimental.pallas.tpu as pltpu
+
+        return pltpu.CompilerParams(dimension_semantics=semantics)
+    except Exception:
+        return None

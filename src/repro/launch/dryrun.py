@@ -1,0 +1,273 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: prove every (architecture x input shape x mesh) cell
+lowers AND compiles under the production meshes, and extract the roofline
+terms from the compiled artifact.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --all
+  PYTHONPATH=src python -m repro.launch.dryrun --arch smollm-135m --shape train_4k --mesh both
+Artifacts: artifacts/dryrun/<mesh>/<arch>__<shape>.json
+"""
+import argparse
+import dataclasses
+import json
+import math
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCHS, SHAPES, get_config
+from repro.distribution import sharding as shd
+from repro.distribution.hlo_analysis import analyze
+from repro.kernels import ops as kops
+from repro.launch.mesh import make_production_mesh
+from repro.models import bundle
+from repro.models import moe as moe_mod
+from repro.training import optimizer as opt
+from repro.training.train_loop import TrainConfig, make_train_step
+
+# ---------------------------------------------------------------------------
+# per-arch training memory policy (see DESIGN.md: memory-fit decisions)
+# ---------------------------------------------------------------------------
+_DEFAULT_POLICY = dict(moment_dtype="float32", accum_dtype="float32", microbatch=16)
+TRAIN_POLICY: Dict[str, Dict[str, Any]] = {
+    "mistral-large-123b": dict(moment_dtype="bfloat16", accum_dtype="bfloat16", microbatch=16),
+    "nemotron-4-340b": dict(moment_dtype="int8", accum_dtype="bfloat16", microbatch=16),
+    "deepseek-v3-671b": dict(moment_dtype="int8", accum_dtype="bfloat16", microbatch=16),
+    "mixtral-8x7b": dict(moment_dtype="bfloat16", accum_dtype="bfloat16", microbatch=16),
+    "pixtral-12b": dict(moment_dtype="float32", accum_dtype="bfloat16", microbatch=16),
+}
+
+#: hardware constants (TPU v5e)
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # bytes/s / chip
+LINK_BW = 50e9  # bytes/s / ICI link
+
+
+def _policy(arch: str) -> Dict[str, Any]:
+    return {**_DEFAULT_POLICY, **TRAIN_POLICY.get(arch, {})}
+
+
+def build_cell(arch: str, shape_name: str, mesh, *, sp: bool, fsdp: bool,
+               moe_impl: str = "dispatch"):
+    """Returns (jitted fn, abstract args) ready to lower under `mesh`."""
+    cfg = get_config(arch)
+    mb = bundle(cfg)
+    shape = SHAPES[shape_name]
+    pol = _policy(arch)
+    moe_mod.set_moe_impl(moe_impl)
+    params_s = mb.param_shapes()
+    pspecs = shd.param_specs(params_s, mesh, fsdp)
+    pnamed = shd.named(pspecs, mesh)
+
+    if shape.kind == "train":
+        ocfg = opt.AdamWConfig(moment_dtype=pol["moment_dtype"])
+        opt_s = jax.eval_shape(lambda p: opt.init(p, ocfg), params_s)
+        onamed = shd.named(shd.opt_state_specs(params_s, opt_s, mesh, fsdp), mesh)
+        tcfg = TrainConfig(microbatch=pol["microbatch"], remat=True,
+                           accum_dtype=pol["accum_dtype"])
+        step = make_train_step(mb, ocfg, tcfg)
+        batch = mb.input_specs(shape)["batch"]
+        bnamed = shd.named(shd.batch_specs(batch, mesh), mesh)
+        fn = jax.jit(
+            step,
+            in_shardings=(pnamed, onamed, bnamed),
+            out_shardings=(pnamed, onamed, None),
+            donate_argnums=(0, 1),
+        )
+        return fn, (params_s, opt_s, batch)
+
+    if shape.kind == "prefill":
+        batch = mb.input_specs(shape)["batch"]
+        bnamed = shd.named(shd.batch_specs(batch, mesh), mesh)
+
+        def prefill(params, b):
+            return mb.prefill_fn(params, b, max_len=shape.seq_len)
+
+        fn = jax.jit(prefill, in_shardings=(pnamed, bnamed))
+        return fn, (params_s, batch)
+
+    # decode
+    specs = mb.input_specs(shape)
+    cache_s, tokens_s, index_s = specs["cache"], specs["tokens"], specs["index"]
+    cnamed = shd.named(shd.cache_specs(cache_s, mesh, shape.global_batch), mesh)
+    tnamed = shd.named(shd.batch_specs(tokens_s, mesh), mesh)
+    inamed = NamedSharding(mesh, P())
+    fn = jax.jit(
+        mb.decode_fn,
+        in_shardings=(pnamed, cnamed, tnamed, inamed),
+        donate_argnums=(1,),
+    )
+    return fn, (params_s, cache_s, tokens_s, index_s)
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    """Analytic useful-FLOPs for the cell (6·N_active·tokens train,
+    2·N_active·tokens inference)."""
+    mb = bundle(get_config(arch))
+    n_active = mb.active_param_count()
+    shape = SHAPES[shape_name]
+    if shape.kind == "train":
+        return 6.0 * n_active * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n_active * shape.global_batch * shape.seq_len
+    return 2.0 * n_active * shape.global_batch  # one token per sequence
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, *, sp: bool = False,
+             fsdp: bool = True, moe_impl: str = "alltoall",
+             kv_quant: bool = False,
+             out_dir: str = "artifacts/dryrun", tag: str = "") -> Dict[str, Any]:
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    cell = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "sp": sp, "fsdp": fsdp, "moe_impl": moe_impl, "kv_quant": kv_quant,
+        "status": "ok",
+    }
+    cfg = get_config(arch)
+    mb = bundle(cfg)
+    if not mb.supports_shape(SHAPES[shape_name]):
+        cell["status"] = "skipped"
+        cell["reason"] = "full-attention arch; long_500k needs sub-quadratic decode (DESIGN.md)"
+        _write(cell, out_dir, mesh_name, arch, shape_name, tag)
+        return cell
+    # Weights-stationary inference: FSDP gathering re-collects every weight
+    # per decoded token (§Perf iteration C1: -95% decode collective bytes).
+    if SHAPES[shape_name].kind != "train":
+        fsdp = False
+        cell["fsdp"] = False
+    from repro.models import layers as _layers
+
+    try:
+        kops.set_impl("jnp")
+        _layers.set_kv_quant(kv_quant)
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        n_dev = math.prod(mesh.shape.values())
+        with shd.use_mesh(mesh, sequence_parallel=sp, fsdp=fsdp):
+            t0 = time.time()
+            fn, args = build_cell(arch, shape_name, mesh, sp=sp, fsdp=fsdp,
+                                  moe_impl=moe_impl)
+            lowered = fn.lower(*args)
+            t_lower = time.time() - t0
+            t0 = time.time()
+            compiled = lowered.compile()
+            t_compile = time.time() - t0
+
+        ma = compiled.memory_analysis()
+        print(ma)  # proves it fits
+        ca = compiled.cost_analysis()
+        print({k: ca[k] for k in ("flops", "bytes accessed") if k in ca})
+        tot = analyze(compiled.as_text())
+
+        mf = model_flops(arch, shape_name)
+        hlo_flops_total = tot.flops * n_dev
+        # kernelized memory: bytes inside pallas_* named scopes are VMEM-
+        # resident tiles on TPU (attention scores/probs, SSD chunk products)
+        # — the CPU-lowered jnp path materializes them, the real kernel
+        # does not.  Both terms are recorded; dominance uses the kernelized
+        # one (that is what the TPU system ships).
+        hbm_kernelized = max(tot.bytes - tot.kernel_bytes, 0.0)
+        cell.update(
+            n_devices=n_dev,
+            lower_s=round(t_lower, 2),
+            compile_s=round(t_compile, 2),
+            per_device=dict(
+                flops=tot.flops,
+                hbm_bytes=tot.bytes,
+                kernel_interior_bytes=tot.kernel_bytes,
+                hbm_bytes_kernelized=hbm_kernelized,
+                collective_bytes=tot.collective_bytes,
+                argument_bytes=getattr(ma, "argument_size_in_bytes", None),
+                temp_bytes=getattr(ma, "temp_size_in_bytes", None),
+                output_bytes=getattr(ma, "output_size_in_bytes", None),
+            ),
+            xla_cost_analysis=dict(
+                flops=ca.get("flops"), bytes_accessed=ca.get("bytes accessed")
+            ),
+            model_flops=mf,
+            hlo_flops_total=hlo_flops_total,
+            useful_ratio=(mf / hlo_flops_total) if hlo_flops_total else None,
+            roofline=dict(
+                compute_s=hlo_flops_total / (n_dev * PEAK_FLOPS),
+                memory_s=hbm_kernelized / HBM_BW,
+                collective_s=tot.total_collective_bytes / LINK_BW,
+                memory_s_raw=tot.bytes / HBM_BW,
+            ),
+        )
+        r = cell["roofline"]
+        r["dominant"] = max(
+            ("compute_s", "memory_s", "collective_s"), key=lambda k: r[k]
+        )
+    except Exception as e:  # noqa
+        cell["status"] = "error"
+        cell["error"] = f"{type(e).__name__}: {e}"
+        cell["traceback"] = traceback.format_exc()[-4000:]
+    finally:
+        _layers.set_kv_quant(False)
+    _write(cell, out_dir, mesh_name, arch, shape_name, tag)
+    return cell
+
+
+def _write(cell, out_dir, mesh_name, arch, shape_name, tag=""):
+    d = os.path.join(out_dir, mesh_name)
+    os.makedirs(d, exist_ok=True)
+    suffix = f"__{tag}" if tag else ""
+    with open(os.path.join(d, f"{arch}__{shape_name}{suffix}.json"), "w") as f:
+        json.dump(cell, f, indent=1, default=str)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="arch id (default: all)")
+    ap.add_argument("--shape", default=None, help="shape name (default: all)")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--sp", action="store_true", help="sequence parallelism")
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--moe-impl", default="alltoall", choices=["dispatch", "alltoall"])
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--all", action="store_true")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else sorted(ARCHS)
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                t0 = time.time()
+                cell = run_cell(
+                    arch, shape, mp, sp=args.sp, fsdp=not args.no_fsdp,
+                    moe_impl=args.moe_impl, out_dir=args.out, tag=args.tag,
+                )
+                status = cell["status"]
+                extra = ""
+                if status == "ok":
+                    r = cell["roofline"]
+                    extra = (
+                        f"compute={r['compute_s'] * 1e3:.1f}ms "
+                        f"mem={r['memory_s'] * 1e3:.1f}ms "
+                        f"coll={r['collective_s'] * 1e3:.1f}ms "
+                        f"dom={r['dominant']} useful={cell['useful_ratio']:.2f}"
+                    )
+                elif status == "error":
+                    failures += 1
+                    extra = cell["error"][:160]
+                print(
+                    f"[{time.strftime('%H:%M:%S')}] {arch} x {shape} x "
+                    f"{'multi' if mp else 'single'}: {status} "
+                    f"({time.time() - t0:.0f}s) {extra}",
+                    flush=True,
+                )
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,22 @@
+"""Production mesh definitions.
+
+A FUNCTION, not a module-level constant: importing this module never touches
+jax device state (the dry-run sets XLA_FLAGS before importing jax)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: 16x16 v5e = 256 chips, axes (data, model).
+    Multi-pod: 2 pods = 512 chips, axes (pod, data, model); the pod axis is
+    the DCN boundary (data parallel / pipeline stage axis)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Whatever devices exist right now, as a 1-D 'data' mesh (tests/examples)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n,), ("data",))

@@ -1,0 +1,414 @@
+"""Foundational JAX layers: norms, RoPE, attention (GQA/MLA), MLPs.
+
+Everything is functional: ``init_*`` builds param pytrees, ``apply``-style
+functions consume them.  Attention math routes through ``kernels.ops`` so
+the Pallas kernels (TPU) and the pure-jnp oracle (CPU / dry-run) share one
+call site.  Softmax/logits accumulate in f32 regardless of param dtype.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# sharding hints (no-ops outside a mesh context; see distribution.sharding)
+# ---------------------------------------------------------------------------
+def hint(x: jnp.ndarray, *logical_axes: Optional[str]) -> jnp.ndarray:
+    from ..distribution import sharding
+
+    return sharding.constrain(x, logical_axes)
+
+
+#: int8 KV-cache quantization (serving lever, EXPERIMENTS.md §Perf C3).
+#: Applies to non-ring GQA caches; MLA's latent cache is already compressed.
+_KV_QUANT = {"enabled": False}
+
+
+def set_kv_quant(enabled: bool) -> None:
+    _KV_QUANT["enabled"] = bool(enabled)
+
+
+def kv_quant_enabled() -> bool:
+    return _KV_QUANT["enabled"]
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+def _dense_init(key, d_in: int, d_out: int, dtype) -> jnp.ndarray:
+    scale = (1.0 / d_in) ** 0.5
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def init_norm(d: int, dtype, kind: str = "rmsnorm") -> Params:
+    p = {"scale": jnp.ones((d,), dtype)}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def apply_norm(p: Params, x: jnp.ndarray, kind: str = "rmsnorm", eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    if kind == "layernorm":
+        mu = xf.mean(-1, keepdims=True)
+        var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:
+        ms = (xf * xf).mean(-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + eps) * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+def rope_tables(
+    positions: jnp.ndarray, dim: int, theta: float
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """positions (...,S) -> (…,S,dim/2) sin/cos tables in f32."""
+    half = dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.sin(ang), jnp.cos(ang)
+
+
+def apply_rope(
+    x: jnp.ndarray,
+    sin: jnp.ndarray,
+    cos: jnp.ndarray,
+    mode: str = "full",
+) -> jnp.ndarray:
+    """x (B,S,H,D); rotate pairs (even, odd).  mode='half' rotates only the
+    first half of D (ChatGLM-style partial rotary)."""
+    if mode == "none":
+        return x
+    d = x.shape[-1]
+    rot_d = d if mode == "full" else d // 2
+    xr, xp = x[..., :rot_d], x[..., rot_d:]
+    x1, x2 = xr[..., 0::2], xr[..., 1::2]
+    s = sin[:, :, None, : rot_d // 2]
+    c = cos[:, :, None, : rot_d // 2]
+    y1 = x1 * c - x2 * s
+    y2 = x2 * c + x1 * s
+    yr = jnp.stack([y1, y2], axis=-1).reshape(xr.shape).astype(x.dtype)
+    return jnp.concatenate([yr, xp], axis=-1) if mode == "half" else yr
+
+
+# ---------------------------------------------------------------------------
+# GQA attention
+# ---------------------------------------------------------------------------
+def init_attention(key, cfg: ArchConfig, dtype) -> Params:
+    d, hd = cfg.d_model, cfg.head_dim_
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return {
+        "wq": _dense_init(kq, d, cfg.n_heads * hd, dtype),
+        "wk": _dense_init(kk, d, cfg.n_kv_heads * hd, dtype),
+        "wv": _dense_init(kv, d, cfg.n_kv_heads * hd, dtype),
+        "wo": _dense_init(ko, cfg.n_heads * hd, d, dtype),
+    }
+
+
+def init_cross_attention(key, cfg: ArchConfig, dtype) -> Params:
+    return init_attention(key, cfg, dtype)
+
+
+def _split_heads(x, n_heads, hd):
+    b, s, _ = x.shape
+    return x.reshape(b, s, n_heads, hd)
+
+
+def attention(
+    p: Params,
+    x: jnp.ndarray,
+    cfg: ArchConfig,
+    positions: jnp.ndarray,
+    cache: Optional[Params] = None,
+    kv_x: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, Optional[Params]]:
+    """GQA self- or cross-attention.
+
+    cache: None (training/prefill without cache) or
+           {"k","v" (B,Smax,Hkv,Dh), "index" scalar} for decode; the updated
+           cache is returned.  kv_x: encoder states for cross-attention
+           (cache then holds precomputed K/V; positions ignored for K).
+    """
+    hd = cfg.head_dim_
+    b, s, _ = x.shape
+    q = _split_heads(x @ p["wq"], cfg.n_heads, hd)
+    q = hint(q, "batch", "seq", "heads", None)
+
+    cross = kv_x is not None
+    if cross:
+        if cache is not None and "k" in cache:  # precomputed at prefill
+            k, v = cache["k"], cache["v"]
+        else:
+            k = _split_heads(kv_x @ p["wk"], cfg.n_kv_heads, hd)
+            v = _split_heads(kv_x @ p["wv"], cfg.n_kv_heads, hd)
+            if cache is not None:
+                cache = {**cache, "k": k, "v": v}
+        sin = cos = None
+    else:
+        k = _split_heads(x @ p["wk"], cfg.n_kv_heads, hd)
+        v = _split_heads(x @ p["wv"], cfg.n_kv_heads, hd)
+        sin, cos = rope_tables(positions, hd, cfg.rope_theta)
+        q = apply_rope(q, sin, cos, cfg.rope_mode)
+        k = apply_rope(k, sin, cos, cfg.rope_mode)
+
+    from ..kernels import ops as kops
+
+    if cache is not None and not cross:
+        idx = cache["index"]
+        smax = cache["k"].shape[1]
+        ring = bool(cfg.sliding_window) and smax == cfg.sliding_window
+        quant = "k_s" in cache  # int8 KV cache (set_kv_quant)
+        if s == 1:
+            # decode: append one token into the (ring) buffer, attend to all
+            from ..kernels.ref import quantize_kv
+
+            if quant:
+                k_w, ks_w = quantize_kv(k)
+                v_w, vs_w = quantize_kv(v)
+            else:
+                k_w, v_w, ks_w, vs_w = k, v, None, None
+            if jnp.ndim(idx) == 1:
+                # ragged continuous batching: per-slot write position/length
+                wr = idx % smax if ring else jnp.minimum(idx, smax - 1)
+                bix = jnp.arange(b)
+                ck = cache["k"].at[bix, wr].set(k_w[:, 0].astype(cache["k"].dtype))
+                cv = cache["v"].at[bix, wr].set(v_w[:, 0].astype(cache["v"].dtype))
+                if quant:
+                    cks = cache["k_s"].at[bix, wr].set(ks_w[:, 0])
+                    cvs = cache["v_s"].at[bix, wr].set(vs_w[:, 0])
+            else:
+                wr = idx % smax if ring else idx
+                ck = jax.lax.dynamic_update_slice(
+                    cache["k"], k_w.astype(cache["k"].dtype), (0, wr, 0, 0)
+                )
+                cv = jax.lax.dynamic_update_slice(
+                    cache["v"], v_w.astype(cache["v"].dtype), (0, wr, 0, 0)
+                )
+                if quant:
+                    cks = jax.lax.dynamic_update_slice(
+                        cache["k_s"], ks_w, (0, wr, 0)
+                    )
+                    cvs = jax.lax.dynamic_update_slice(
+                        cache["v_s"], vs_w, (0, wr, 0)
+                    )
+            cache = {**cache, "k": ck, "v": cv, "index": idx + 1}
+            if quant:
+                cache.update(k_s=cks, v_s=cvs)
+                out = kops.decode_attention_q8(q, ck, cks, cv, cvs, length=idx + 1)
+            else:
+                out = kops.decode_attention(
+                    q, ck, cv, length=idx + 1, sliding_window=cfg.sliding_window
+                )
+        else:
+            # prefill (from an empty cache): causal attention over the fresh
+            # block; keys/values recorded into the cache for later decode.
+            out = kops.flash_attention(
+                q, k, v, causal=True, sliding_window=cfg.sliding_window
+            )
+            if quant:
+                from ..kernels.ref import quantize_kv
+
+                kq_b, ks_b = quantize_kv(k)
+                vq_b, vs_b = quantize_kv(v)
+                ck = jax.lax.dynamic_update_slice(
+                    cache["k"], kq_b, (0, idx, 0, 0)
+                )
+                cv = jax.lax.dynamic_update_slice(
+                    cache["v"], vq_b, (0, idx, 0, 0)
+                )
+                cks = jax.lax.dynamic_update_slice(cache["k_s"], ks_b, (0, idx, 0))
+                cvs = jax.lax.dynamic_update_slice(cache["v_s"], vs_b, (0, idx, 0))
+                cache = {**cache, "k": ck, "v": cv, "k_s": cks, "v_s": cvs,
+                         "index": idx + s}
+            else:
+                if ring and s >= smax:
+                    r = s % smax
+                    kw = jnp.roll(k[:, -smax:], r, axis=1).astype(cache["k"].dtype)
+                    vw = jnp.roll(v[:, -smax:], r, axis=1).astype(cache["v"].dtype)
+                    ck = kw
+                    cv = vw
+                else:
+                    ck = jax.lax.dynamic_update_slice(
+                        cache["k"], k.astype(cache["k"].dtype), (0, idx, 0, 0)
+                    )
+                    cv = jax.lax.dynamic_update_slice(
+                        cache["v"], v.astype(cache["v"].dtype), (0, idx, 0, 0)
+                    )
+                cache = {**cache, "k": ck, "v": cv, "index": idx + s}
+    elif cross:
+        out = kops.cross_attention(q, k, v)
+    else:
+        out = kops.flash_attention(
+            q, k, v, causal=True, sliding_window=cfg.sliding_window
+        )
+    out = hint(out, "batch", "seq", "heads", None)
+    y = out.reshape(b, s, cfg.n_heads * hd) @ p["wo"]
+    return hint(y, "batch", "seq", None), cache
+
+
+# ---------------------------------------------------------------------------
+# MLA attention (DeepSeek-V3) — latent-compressed KV cache
+# ---------------------------------------------------------------------------
+def init_mla(key, cfg: ArchConfig, dtype) -> Params:
+    d = cfg.d_model
+    ks = jax.random.split(key, 8)
+    qk_dim = cfg.qk_nope_head_dim + cfg.qk_rope_head_dim
+    return {
+        "wq_a": _dense_init(ks[0], d, cfg.q_lora_rank, dtype),
+        "q_norm": init_norm(cfg.q_lora_rank, dtype),
+        "wq_b": _dense_init(ks[1], cfg.q_lora_rank, cfg.n_heads * qk_dim, dtype),
+        "wkv_a": _dense_init(ks[2], d, cfg.kv_lora_rank + cfg.qk_rope_head_dim, dtype),
+        "kv_norm": init_norm(cfg.kv_lora_rank, dtype),
+        "wkv_b": _dense_init(
+            ks[3],
+            cfg.kv_lora_rank,
+            cfg.n_heads * (cfg.qk_nope_head_dim + cfg.v_head_dim),
+            dtype,
+        ),
+        "wo": _dense_init(ks[4], cfg.n_heads * cfg.v_head_dim, d, dtype),
+    }
+
+
+def mla_attention(
+    p: Params,
+    x: jnp.ndarray,
+    cfg: ArchConfig,
+    positions: jnp.ndarray,
+    cache: Optional[Params] = None,
+) -> Tuple[jnp.ndarray, Optional[Params]]:
+    """Multi-head Latent Attention.  The cache stores only the compressed
+    latent c_kv (kv_lora_rank) and the shared rotary key k_pe — DeepSeek-V3's
+    memory saving, reproduced exactly."""
+    b, s, _ = x.shape
+    nope, rope_d, vh = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    h = cfg.n_heads
+
+    q = apply_norm(p["q_norm"], x @ p["wq_a"]) @ p["wq_b"]
+    q = q.reshape(b, s, h, nope + rope_d)
+    q_nope, q_pe = q[..., :nope], q[..., nope:]
+
+    kv_a = x @ p["wkv_a"]
+    c_kv, k_pe = kv_a[..., : cfg.kv_lora_rank], kv_a[..., cfg.kv_lora_rank :]
+    c_kv = apply_norm(p["kv_norm"], c_kv)
+    sin, cos = rope_tables(positions, rope_d, cfg.rope_theta)
+    q_pe = apply_rope(q_pe, sin, cos)
+    k_pe = apply_rope(k_pe[:, :, None, :], sin, cos)  # single shared rope head
+
+    from ..kernels import ops as kops
+
+    if cache is not None:
+        idx = cache["index"]
+        if jnp.ndim(idx) == 1:
+            # ragged continuous batching (s == 1): per-slot write position
+            smax0 = cache["c_kv"].shape[1]
+            wr = jnp.minimum(idx, smax0 - 1)
+            bix = jnp.arange(b)
+            c_all = cache["c_kv"].at[bix, wr].set(
+                c_kv[:, 0].astype(cache["c_kv"].dtype)
+            )
+            pe_all = cache["k_pe"].at[bix, wr].set(
+                k_pe[:, 0, 0, :].astype(cache["k_pe"].dtype)
+            )
+        else:
+            c_all = jax.lax.dynamic_update_slice(
+                cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), (0, idx, 0)
+            )
+            pe_all = jax.lax.dynamic_update_slice(
+                cache["k_pe"], k_pe[:, :, 0, :].astype(cache["k_pe"].dtype), (0, idx, 0)
+            )
+        cache = {**cache, "c_kv": c_all, "k_pe": pe_all, "index": idx + s}
+        smax = c_all.shape[1]
+    if cache is not None and s > 1:
+        # prefill: cache recorded above; attention over the fresh block only
+        cache_for_math = None
+    else:
+        cache_for_math = cache
+    if cache_for_math is not None:
+        # ---- decode with weight ABSORPTION (DeepSeek-V3's trick) ----------
+        # Never decompress the latent cache: fold wkv_b's key half into the
+        # query and apply its value half after attending over the latents.
+        wb = p["wkv_b"].reshape(cfg.kv_lora_rank, h, nope + vh)
+        wb_k, wb_v = wb[..., :nope], wb[..., nope:]
+        q_eff = jnp.einsum("bshn,rhn->bshr", q_nope.astype(jnp.float32), wb_k.astype(jnp.float32))
+        scores = jnp.einsum("bshr,btr->bhst", q_eff, c_all.astype(jnp.float32))
+        scores += jnp.einsum(
+            "bshd,btd->bhst", q_pe.astype(jnp.float32), pe_all.astype(jnp.float32)
+        )
+        scores = scores / jnp.sqrt(jnp.float32(nope + rope_d))
+        lim = jnp.broadcast_to(idx + s, (b,))
+        valid = jnp.arange(smax)[None, None, None, :] < lim[:, None, None, None]
+        scores = jnp.where(valid, scores, -1e30)
+        pr = jax.nn.softmax(scores, axis=-1)
+        ctx = jnp.einsum("bhst,btr->bshr", pr, c_all.astype(jnp.float32))
+        out = jnp.einsum("bshr,rhv->bshv", ctx, wb_v.astype(jnp.float32)).astype(x.dtype)
+    else:
+        # ---- train / prefill: decompress K/V (dense MXU matmuls) ----------
+        kv = (c_kv @ p["wkv_b"]).reshape(b, s, h, nope + vh)
+        k_nope, v = kv[..., :nope], kv[..., nope:]
+        k = jnp.concatenate(
+            [
+                k_nope,
+                jnp.broadcast_to(
+                    k_pe[:, :, 0, :][:, :, None, :], k_nope.shape[:3] + (rope_d,)
+                ),
+            ],
+            axis=-1,
+        )
+        qfull = jnp.concatenate([q_nope, q_pe], axis=-1)
+        out = kops.flash_attention(qfull, k, v, causal=True)
+    y = out.reshape(b, s, h * vh) @ p["wo"]
+    return hint(y, "batch", "seq", None), cache
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+def init_mlp(key, d: int, f: int, kind: str, dtype) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"w_out": _dense_init(k2, f, d, dtype)}
+    if kind == "swiglu":
+        p["w_gate"] = _dense_init(k1, d, f, dtype)
+        p["w_up"] = _dense_init(k3, d, f, dtype)
+    else:
+        p["w_in"] = _dense_init(k1, d, f, dtype)
+    return p
+
+
+def apply_mlp(p: Params, x: jnp.ndarray, kind: str) -> jnp.ndarray:
+    if kind == "swiglu":
+        h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    elif kind == "relu2":
+        h = jnp.square(jax.nn.relu(x @ p["w_in"]))
+    else:  # gelu
+        h = jax.nn.gelu(x @ p["w_in"])
+    h = hint(h, "batch", "seq", "mlp")
+    return h @ p["w_out"]
+
+
+# ---------------------------------------------------------------------------
+# embeddings / LM head
+# ---------------------------------------------------------------------------
+def init_embedding(key, vocab: int, d: int, dtype) -> jnp.ndarray:
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+def embed(table: jnp.ndarray, tokens: jnp.ndarray) -> jnp.ndarray:
+    return hint(jnp.take(table, tokens, axis=0), "batch", "seq", None)
+
+
+def lm_logits(table_or_w: jnp.ndarray, x: jnp.ndarray, tied: bool) -> jnp.ndarray:
+    w = table_or_w.T if tied else table_or_w
+    logits = x.astype(jnp.float32) @ w.astype(jnp.float32)
+    return hint(logits, "batch", "seq", "vocab")

@@ -1,0 +1,153 @@
+"""Mixture-of-Experts layer: router + capacity-bounded expert dispatch.
+
+Two interchangeable implementations (selected via ``set_moe_impl``; both
+compute identical math up to token dropping at capacity):
+
+* "dispatch" — baseline: GShard/MaxText-style grouped one-hot dispatch.
+               Tokens are split into G groups; dispatch/combine are dense
+               einsums over (group, token, expert, capacity) masks, which
+               GSPMD shards cleanly (groups over the data axes, experts
+               over 'model').  Costs ~2 extra (T x E*C x D) matmuls — the
+               known einsum-MoE overhead.
+* "alltoall" — production EP: shard_map over the 'model' axis with explicit
+               all_to_all dispatch (a §Perf iteration; see EXPERIMENTS.md).
+
+Token dropping: tokens beyond an expert's per-group capacity
+C = ceil(Tg*k/E * cf) are dropped (contribute zero) — the standard
+Switch/GShard discipline.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from . import layers
+
+_MOE_IMPL = {"mode": "dispatch"}
+
+
+def set_moe_impl(mode: str) -> None:
+    assert mode in ("dispatch", "alltoall")
+    _MOE_IMPL["mode"] = mode
+
+
+def get_moe_impl() -> str:
+    return _MOE_IMPL["mode"]
+
+
+def init_moe(key, cfg: ArchConfig, dtype) -> Dict[str, Any]:
+    d = cfg.d_model
+    f = cfg.moe_d_ff or cfg.d_ff
+    e = cfg.n_experts
+    ks = jax.random.split(key, 6)
+    p: Dict[str, Any] = {
+        "router": (jax.random.normal(ks[0], (d, e), jnp.float32) * 0.02).astype(
+            jnp.float32  # router stays f32 for stable softmax
+        ),
+        "experts": {
+            "w_gate": jnp.stack(
+                [layers._dense_init(k, d, f, dtype) for k in jax.random.split(ks[1], e)]
+            ),
+            "w_up": jnp.stack(
+                [layers._dense_init(k, d, f, dtype) for k in jax.random.split(ks[2], e)]
+            ),
+            "w_out": jnp.stack(
+                [layers._dense_init(k, f, d, dtype) for k in jax.random.split(ks[3], e)]
+            ),
+        },
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = layers.init_mlp(
+            ks[4], d, f * cfg.n_shared_experts, "swiglu", dtype
+        )
+    return p
+
+
+def _route(p, xt: jnp.ndarray, cfg: ArchConfig):
+    logits = xt.astype(jnp.float32) @ p["router"]  # (T,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, eidx = jax.lax.top_k(probs, cfg.experts_per_token)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    # load-balancing auxiliary loss (Switch): E * sum_e f_e * P_e
+    me = probs.mean(0)
+    ce = jnp.zeros_like(me).at[eidx.reshape(-1)].add(1.0) / eidx.size
+    aux = cfg.n_experts * jnp.sum(me * ce)
+    return gates, eidx, aux
+
+
+def _expert_ffn(experts, h: jnp.ndarray) -> jnp.ndarray:
+    """h (E,...,D) -> (E,...,D) via per-expert SwiGLU (batched einsum)."""
+    g = jnp.einsum("e...d,edf->e...f", h, experts["w_gate"])
+    u = jnp.einsum("e...d,edf->e...f", h, experts["w_up"])
+    a = jax.nn.silu(g) * u
+    return jnp.einsum("e...f,efd->e...d", a, experts["w_out"])
+
+
+def _group_count(t: int) -> int:
+    """~1024-token groups, power-of-two, >= 1 (shardable over data axes)."""
+    g = max(1, t // 1024)
+    return 1 << (g - 1).bit_length() if g & (g - 1) else g
+
+
+def apply_moe(
+    p: Dict[str, Any], x: jnp.ndarray, cfg: ArchConfig
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x (B,S,D) -> (y, aux_loss)."""
+    b, s, d = x.shape
+    xt = x.reshape(b * s, d)
+    gates, eidx, aux = _route(p, xt, cfg)
+    if _MOE_IMPL["mode"] == "alltoall":
+        from ..distribution import moe_ep
+
+        y = moe_ep.apply_moe_alltoall(p, xt, gates, eidx, cfg)
+    else:
+        y = _apply_dispatch(p, xt, gates, eidx, cfg)
+    if "shared" in p:
+        y = y + layers.apply_mlp(p["shared"], xt, "swiglu")
+    return y.reshape(b, s, d).astype(x.dtype), aux
+
+
+def _apply_dispatch(p, xt, gates, eidx, cfg: ArchConfig) -> jnp.ndarray:
+    """GShard grouped dense dispatch/combine."""
+    t, d = xt.shape
+    k, e = cfg.experts_per_token, cfg.n_experts
+    g = _group_count(t)
+    tg = t // g
+    cap = max(4, int(math.ceil(tg * k / e * cfg.capacity_factor)))
+    cap = min(cap, tg * k)
+
+    eidx_g = eidx.reshape(g, tg, k)
+    gates_g = gates.reshape(g, tg, k)
+    x_g = layers.hint(xt.reshape(g, tg, d), "batch", None, None)
+
+    # expert one-hot per slot: (g, tg, k, e)
+    onehot = jax.nn.one_hot(eidx_g, e, dtype=jnp.float32)
+    onehot = layers.hint(onehot, "batch", None, None, "experts")
+    # position of each slot within its expert's buffer (token-major priority)
+    flat = onehot.reshape(g, tg * k, e)
+    pos = jnp.cumsum(flat, axis=1) - flat  # exclusive cumsum
+    pos = pos.reshape(g, tg, k, e)
+    keep = (pos < cap) & (onehot > 0)
+    # a token picks an expert in AT MOST one top-k slot, so the k axis
+    # collapses: rank-4 dispatch, never a (.., k, e, cap) rank-5 mask.
+    sel = keep.any(2)  # (g, tg, e)
+    pos_te = (pos * keep).sum(2).astype(jnp.int32)  # (g, tg, e)
+    gate_te = (gates_g[..., None] * keep).sum(2)  # (g, tg, e)
+
+    dispatch = jax.nn.one_hot(pos_te, cap, dtype=jnp.float32) * sel[..., None]
+    dispatch = layers.hint(dispatch, "batch", None, "experts", None)
+    combine = dispatch * gate_te[..., None]  # (g, tg, e, cap)
+
+    dt = xt.dtype
+    expert_in = jnp.einsum("gtec,gtd->gecd", dispatch.astype(dt), x_g)
+    expert_in = layers.hint(
+        expert_in.swapaxes(0, 1), "experts", "batch", None, None
+    )  # (e, g, cap, d)
+    expert_out = _expert_ffn(p["experts"], expert_in)  # (e, g, cap, d)
+    expert_out = expert_out.swapaxes(0, 1)  # (g, e, cap, d)
+    y = jnp.einsum("gtec,gecd->gtd", combine.astype(dt), expert_out)
+    return y.reshape(t, d)

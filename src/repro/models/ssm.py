@@ -1,0 +1,267 @@
+"""Recurrent blocks: Mamba-2 (SSD), xLSTM's mLSTM and sLSTM.
+
+Training uses parallel/chunkwise forms (MXU-friendly matmuls); decoding uses
+the O(1)-state recurrent forms.  State pytrees double as the "KV cache" for
+these blocks, which is what makes the ``long_500k`` shape feasible.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from . import layers
+from ..kernels import ops as kops
+
+Params = Dict[str, Any]
+_CONV_K = 4  # mamba short-conv width
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2
+# ---------------------------------------------------------------------------
+def mamba_dims(cfg: ArchConfig) -> Tuple[int, int, int, int]:
+    d_inner = cfg.ssm_expand * cfg.d_model
+    heads = cfg.ssm_heads or max(1, d_inner // 64)
+    head_p = d_inner // heads
+    return d_inner, heads, head_p, cfg.ssm_state
+
+
+def init_mamba2(key, cfg: ArchConfig, dtype) -> Params:
+    d = cfg.d_model
+    d_inner, h, p_, n = mamba_dims(cfg)
+    ks = jax.random.split(key, 6)
+    conv_dim = d_inner + 2 * n
+    return {
+        "w_in": layers._dense_init(ks[0], d, 2 * d_inner + 2 * n + h, dtype),
+        "conv_w": (jax.random.normal(ks[1], (_CONV_K, conv_dim), jnp.float32) * 0.1).astype(dtype),
+        "a_log": jnp.zeros((h,), jnp.float32),  # A = -exp(a_log) = -1
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "norm": layers.init_norm(d_inner, dtype),
+        "w_out": layers._dense_init(ks[2], d_inner, d, dtype),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, state: Optional[jnp.ndarray]):
+    """Depthwise causal conv; x (B,S,C), w (K,C).  Returns (y, new_state)."""
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    y = sum(xp[:, i : i + x.shape[1]] * w[i][None, None, :] for i in range(k))
+    new_state = xp[:, -(k - 1) :] if k > 1 else None
+    return jax.nn.silu(y), new_state
+
+
+def mamba2_block(
+    p: Params,
+    x: jnp.ndarray,
+    cfg: ArchConfig,
+    state: Optional[Params] = None,
+) -> Tuple[jnp.ndarray, Optional[Params]]:
+    """x (B,S,D).  state = {"ssm" (B,H,P,N), "conv" (B,K-1,convdim)} or None."""
+    b, s, d = x.shape
+    d_inner, h, pdim, n = mamba_dims(cfg)
+    z_xbc_dt = x @ p["w_in"]
+    z = z_xbc_dt[..., :d_inner]
+    xbc = z_xbc_dt[..., d_inner : d_inner + d_inner + 2 * n]
+    dt_raw = z_xbc_dt[..., -h:]
+
+    conv_state = state["conv"] if state is not None else None
+    xbc, new_conv = _causal_conv(xbc, p["conv_w"], conv_state)
+    xin = xbc[..., :d_inner].reshape(b, s, h, pdim)
+    Bm = xbc[..., d_inner : d_inner + n]
+    Cm = xbc[..., d_inner + n :]
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["a_log"])
+
+    if state is not None and s == 1:
+        # recurrent decode step
+        h_prev = state["ssm"]
+        decay = jnp.exp(A[None, :] * dt[:, 0])  # (B,H)
+        upd = jnp.einsum(
+            "bh,bhp,bn->bhpn", dt[:, 0], xin[:, 0].astype(jnp.float32), Bm[:, 0].astype(jnp.float32)
+        )
+        h_new = h_prev * decay[:, :, None, None] + upd
+        y = jnp.einsum("bhpn,bn->bhp", h_new, Cm[:, 0].astype(jnp.float32))[:, None]
+        new_state = {"ssm": h_new, "conv": new_conv}
+    else:
+        init = state["ssm"] if state is not None else None
+        y, h_new = kops.ssd_scan(xin, dt, A, Bm, Cm, chunk=cfg.ssm_chunk, initial_state=init)
+        new_state = {"ssm": h_new, "conv": new_conv} if state is not None else None
+
+    y = y.astype(x.dtype) + xin * p["d_skip"].astype(x.dtype)[None, None, :, None]
+    y = y.reshape(b, s, d_inner) * jax.nn.silu(z)
+    y = layers.apply_norm(p["norm"], y)
+    return y @ p["w_out"], new_state
+
+
+def init_mamba_state(cfg: ArchConfig, batch: int, dtype=jnp.float32) -> Params:
+    d_inner, h, pdim, n = mamba_dims(cfg)
+    return {
+        "ssm": jnp.zeros((batch, h, pdim, n), jnp.float32),
+        "conv": jnp.zeros((batch, _CONV_K - 1, d_inner + 2 * n), dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (xLSTM): matrix-memory LSTM with parallel (attention-like) training
+# ---------------------------------------------------------------------------
+def init_mlstm(key, cfg: ArchConfig, dtype) -> Params:
+    d = cfg.d_model
+    h = cfg.n_heads
+    dh = 2 * d // h  # up-projection factor 2
+    ks = jax.random.split(key, 8)
+    return {
+        "w_up": layers._dense_init(ks[0], d, 2 * d, dtype),
+        "w_z": layers._dense_init(ks[1], d, 2 * d, dtype),
+        "wq": layers._dense_init(ks[2], 2 * d, h * dh, dtype),
+        "wk": layers._dense_init(ks[3], 2 * d, h * dh, dtype),
+        "wv": layers._dense_init(ks[4], 2 * d, h * dh, dtype),
+        "w_if": (jax.random.normal(ks[5], (2 * d, 2 * h), jnp.float32) * 0.02).astype(dtype),
+        "if_bias": jnp.concatenate([jnp.zeros((h,)), 3.0 * jnp.ones((h,))]).astype(jnp.float32),
+        "norm": layers.init_norm(2 * d, dtype),
+        "w_down": layers._dense_init(ks[6], 2 * d, d, dtype),
+    }
+
+
+def mlstm_block(
+    p: Params,
+    x: jnp.ndarray,
+    cfg: ArchConfig,
+    state: Optional[Params] = None,
+) -> Tuple[jnp.ndarray, Optional[Params]]:
+    """state = {"C" (B,H,Dk,Dv), "n" (B,H,Dk), "m" (B,H)} for decode."""
+    b, s, d = x.shape
+    h = cfg.n_heads
+    dh = 2 * d // h
+    up = x @ p["w_up"]
+    z = jax.nn.silu(x @ p["w_z"])
+    q = (up @ p["wq"]).reshape(b, s, h, dh)
+    k = (up @ p["wk"]).reshape(b, s, h, dh) / jnp.sqrt(dh).astype(x.dtype)
+    v = (up @ p["wv"]).reshape(b, s, h, dh)
+    gates = (up.astype(jnp.float32) @ p["w_if"].astype(jnp.float32)) + p["if_bias"]
+    i_pre, f_pre = gates[..., :h], gates[..., h:]  # (B,S,H)
+    logf = -jax.nn.softplus(-f_pre)  # log sigmoid(f)
+
+    if state is not None and s == 1:
+        C, n, m = state["C"], state["n"], state["m"]
+        m_new = jnp.maximum(logf[:, 0] + m, i_pre[:, 0])
+        i_g = jnp.exp(i_pre[:, 0] - m_new)
+        f_g = jnp.exp(logf[:, 0] + m - m_new)
+        qf = q[:, 0].astype(jnp.float32)
+        kf = k[:, 0].astype(jnp.float32)
+        vf = v[:, 0].astype(jnp.float32)
+        C = C * f_g[..., None, None] + i_g[..., None, None] * kf[..., :, None] * vf[..., None, :]
+        n = n * f_g[..., None] + i_g[..., None] * kf
+        num = jnp.einsum("bhk,bhkv->bhv", qf, C)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", qf, n)), jnp.exp(-m_new))
+        y = (num / den[..., None])[:, None]  # (B,1,H,Dv)
+        new_state = {"C": C, "n": n, "m": m_new}
+    else:
+        # parallel stabilized form (xLSTM paper eq. 19-27)
+        lf_cum = jnp.cumsum(logf, axis=1)  # (B,S,H)
+        dmat = lf_cum[:, :, None, :] - lf_cum[:, None, :, :] + i_pre[:, None, :, :]
+        tri = jnp.tril(jnp.ones((s, s), bool))
+        dmat = jnp.where(tri[None, :, :, None], dmat, -jnp.inf)
+        m_row = jnp.max(dmat, axis=2)  # (B,S,H)
+        dprime = jnp.exp(dmat - m_row[:, :, None, :])
+        scores = jnp.einsum("bqhd,bkhd->bqkh", q.astype(jnp.float32), k.astype(jnp.float32))
+        w = scores * dprime
+        den = jnp.maximum(jnp.abs(w.sum(2)), jnp.exp(-m_row))  # (B,S,H)
+        y = jnp.einsum("bqkh,bkhd->bqhd", w, v.astype(jnp.float32)) / den[..., None]
+        new_state = state
+        if state is not None:
+            # prefill: derive the final recurrent state in closed form
+            # m_T = max_u (i_u + lf_T - lf_u); C_T = sum_u e^{i_u+lf_T-lf_u-m_T} k_u v_u^T
+            tailw = i_pre + lf_cum[:, -1:, :] - lf_cum  # (B,S,H)
+            m_T = jnp.max(tailw, axis=1)  # (B,H)
+            wgt = jnp.exp(tailw - m_T[:, None, :])  # (B,S,H)
+            kf = k.astype(jnp.float32)
+            vf = v.astype(jnp.float32)
+            C_T = jnp.einsum("bsh,bshk,bshv->bhkv", wgt, kf, vf)
+            n_T = jnp.einsum("bsh,bshk->bhk", wgt, kf)
+            new_state = {"C": C_T, "n": n_T, "m": m_T}
+
+    y = y.astype(x.dtype).reshape(b, s, 2 * d)
+    y = layers.apply_norm(p["norm"], y) * z
+    return y @ p["w_down"], new_state
+
+
+def init_mlstm_state(cfg: ArchConfig, batch: int) -> Params:
+    h = cfg.n_heads
+    dh = 2 * cfg.d_model // h
+    return {
+        "C": jnp.zeros((batch, h, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, h, dh), jnp.float32),
+        "m": jnp.zeros((batch, h), jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (xLSTM): scalar-memory recurrent LSTM with exponential gating
+# ---------------------------------------------------------------------------
+def init_slstm(key, cfg: ArchConfig, dtype) -> Params:
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    return {
+        "w_gates": layers._dense_init(ks[0], d, 4 * d, dtype),  # i,f,z,o
+        "r_gates": layers._dense_init(ks[1], d, 4 * d, dtype),  # recurrent
+        "g_bias": jnp.zeros((4 * d,), jnp.float32),
+        "norm": layers.init_norm(d, dtype),
+        "w_ff": layers.init_mlp(ks[2], d, int(d * 4 / 3), "swiglu", dtype),
+    }
+
+
+def slstm_block(
+    p: Params,
+    x: jnp.ndarray,
+    cfg: ArchConfig,
+    state: Optional[Params] = None,
+) -> Tuple[jnp.ndarray, Optional[Params]]:
+    """state = {"c","n","h","m"} each (B,D)."""
+    b, s, d = x.shape
+    wx = (x @ p["w_gates"]).astype(jnp.float32)  # (B,S,4D)
+
+    if state is None:
+        st = {
+            "c": jnp.zeros((b, d), jnp.float32),
+            "n": jnp.ones((b, d), jnp.float32),
+            "h": jnp.zeros((b, d), jnp.float32),
+            "m": jnp.zeros((b, d), jnp.float32),
+        }
+    else:
+        st = state
+
+    rw = p["r_gates"].astype(jnp.float32)
+    gb = p["g_bias"]
+
+    def step(carry, wx_t):
+        c, n, hprev, m = carry["c"], carry["n"], carry["h"], carry["m"]
+        g = wx_t + hprev @ rw + gb
+        ig, fg, zg, og = jnp.split(g, 4, axis=-1)
+        m_new = jnp.maximum(-jax.nn.softplus(-fg) + m, ig)
+        i = jnp.exp(ig - m_new)
+        f = jnp.exp(-jax.nn.softplus(-fg) + m - m_new)
+        c_new = f * c + i * jnp.tanh(zg)
+        n_new = f * n + i
+        h_new = jax.nn.sigmoid(og) * c_new / jnp.maximum(n_new, 1e-6)
+        return {"c": c_new, "n": n_new, "h": h_new, "m": m_new}, h_new
+
+    carry, hs = jax.lax.scan(step, st, jnp.moveaxis(wx, 0, 1))
+    y = jnp.moveaxis(hs, 0, 1).astype(x.dtype)  # (B,S,D)
+    y = layers.apply_norm(p["norm"], y)
+    y = y + layers.apply_mlp(p["w_ff"], y, "swiglu")
+    return y, (carry if state is not None else None)
+
+
+def init_slstm_state(cfg: ArchConfig, batch: int) -> Params:
+    d = cfg.d_model
+    z = lambda: jnp.zeros((batch, d), jnp.float32)
+    return {"c": z(), "n": jnp.ones((batch, d), jnp.float32), "h": z(), "m": z()}

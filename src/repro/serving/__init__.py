@@ -1,0 +1,18 @@
+"""Serving: continuous-batching engine + placement-integrated cluster.
+
+    kvcache — ragged decode-state insertion + paged KV cache substrate
+    engine  — JetStream-style slot engine (prefill / insert / ragged decode)
+    cluster — ClusterServer: the paper's placement engine as the scheduler
+"""
+from .engine import Completion, Engine, EngineConfig, Request  # noqa: F401
+from .kvcache import BlockAllocator, PagedKVCache, insert_prefix  # noqa: F401
+
+__all__ = [
+    "Completion",
+    "Engine",
+    "EngineConfig",
+    "Request",
+    "BlockAllocator",
+    "PagedKVCache",
+    "insert_prefix",
+]

@@ -1,0 +1,66 @@
+"""Deterministic synthetic data pipeline.
+
+``get_batch(step)`` is a pure function of (config, step), which makes the
+pipeline trivially resumable after a failure (fault tolerance by
+construction) and shardable: every host computes the same global batch and
+``jax.device_put`` with a batch-sharded NamedSharding splits it.  The token
+stream has learnable structure (a noisy modular-affine sequence), so small
+models show decreasing loss within a few hundred steps.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    frontend: Optional[str] = None  # vit | audio
+    frontend_len: int = 0
+    frontend_dim: int = 0
+    dtype: str = "bfloat16"
+
+
+def get_batch(cfg: DataConfig, step: int) -> Dict[str, jnp.ndarray]:
+    """Global batch for ``step`` (numpy-computed, deterministic)."""
+    rng = np.random.default_rng(cfg.seed * 1_000_003 + step)
+    b, s, v = cfg.global_batch, cfg.seq_len, cfg.vocab_size
+    start = rng.integers(0, v, size=(b, 1))
+    stride = rng.integers(1, 7, size=(b, 1))
+    seq = (start + stride * np.arange(s)[None, :]) % v
+    noise_mask = rng.random((b, s)) < 0.05
+    noise = rng.integers(0, v, size=(b, s))
+    tokens = np.where(noise_mask, noise, seq).astype(np.int32)
+    batch: Dict[str, jnp.ndarray] = {"tokens": jnp.asarray(tokens)}
+    if cfg.frontend == "vit":
+        batch["patch_embeds"] = jnp.asarray(
+            rng.standard_normal((b, cfg.frontend_len, cfg.frontend_dim)) * 0.1,
+            dtype=jnp.dtype(cfg.dtype),
+        )
+    elif cfg.frontend == "audio":
+        batch["frames"] = jnp.asarray(
+            rng.standard_normal((b, cfg.frontend_len, cfg.frontend_dim)) * 0.1,
+            dtype=jnp.dtype(cfg.dtype),
+        )
+    return batch
+
+
+def shard_batch(batch, mesh, batch_axes=("pod", "data")):
+    """Place a host-global batch onto the mesh, batch-dim sharded."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    axes = tuple(a for a in batch_axes if a in mesh.axis_names)
+
+    def put(x):
+        spec = P(axes, *([None] * (x.ndim - 1)))
+        return jax.device_put(x, NamedSharding(mesh, spec))
+
+    return jax.tree.map(put, batch)

@@ -1,0 +1,134 @@
+"""Optimizers: AdamW with configurable moment precision, including
+int8-QUANTIZED moments (per-row block scales) — the gradient-compression
+trick that lets the 340B/671B archs fit v5e HBM when fully sharded.
+
+Pure functional pytrees; no optax dependency.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    moment_dtype: str = "float32"  # float32 | bfloat16 | int8
+    warmup_steps: int = 100
+    decay_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+# ---------------------------------------------------------------------------
+# int8 block quantization (per leading-row scale)
+# ---------------------------------------------------------------------------
+def _q8(x: jnp.ndarray) -> Dict[str, jnp.ndarray]:
+    """Symmetric int8 quantization with one f32 scale per row (axis 0 kept)."""
+    flat = x.reshape(x.shape[0], -1) if x.ndim > 1 else x.reshape(1, -1)
+    scale = jnp.max(jnp.abs(flat), axis=1, keepdims=True) / 127.0 + 1e-20
+    q = jnp.clip(jnp.round(flat / scale), -127, 127).astype(jnp.int8)
+    return {"q": q.reshape(x.shape), "scale": scale.astype(jnp.float32)}
+
+
+def _dq8(packed: Dict[str, jnp.ndarray], shape) -> jnp.ndarray:
+    q = packed["q"].astype(jnp.float32)
+    flat = q.reshape(q.shape[0], -1) if q.ndim > 1 else q.reshape(1, -1)
+    return (flat * packed["scale"]).reshape(shape)
+
+
+def _encode_moment(x: jnp.ndarray, dtype: str):
+    if dtype == "int8":
+        return _q8(x)
+    return x.astype(jnp.dtype(dtype))
+
+
+def _decode_moment(m, shape, dtype: str) -> jnp.ndarray:
+    if dtype == "int8":
+        return _dq8(m, shape)
+    return m.astype(jnp.float32)
+
+
+def _is_moment_leaf(node) -> bool:
+    return isinstance(node, dict) and set(node) == {"q", "scale"}
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+def init(params: Params, cfg: AdamWConfig) -> Params:
+    def zero_like(p):
+        z = jnp.zeros(p.shape, jnp.float32)
+        return _encode_moment(z, cfg.moment_dtype)
+
+    return {
+        "m": jax.tree.map(zero_like, params),
+        "v": jax.tree.map(zero_like, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def schedule(step: jnp.ndarray, cfg: AdamWConfig) -> jnp.ndarray:
+    warm = jnp.minimum(step.astype(jnp.float32) / max(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip(
+        (step.astype(jnp.float32) - cfg.warmup_steps)
+        / max(cfg.decay_steps - cfg.warmup_steps, 1),
+        0.0,
+        1.0,
+    )
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    frac = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * cos
+    return cfg.lr * warm * frac
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree))
+    )
+
+
+def apply(
+    params: Params, grads: Params, state: Params, cfg: AdamWConfig
+) -> Tuple[Params, Params, Dict[str, jnp.ndarray]]:
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9)) if cfg.grad_clip else 1.0
+    lr = schedule(step, cfg)
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.flatten(grads)[0]
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+
+    new_p, new_m, new_v = [], [], []
+    for p, g, m_enc, v_enc in zip(flat_p, flat_g, flat_m, flat_v):
+        g = g.astype(jnp.float32) * clip
+        m = _decode_moment(m_enc, p.shape, cfg.moment_dtype)
+        v = _decode_moment(v_enc, p.shape, cfg.moment_dtype)
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        upd = (m / b1c) / (jnp.sqrt(v / b2c) + cfg.eps)
+        if cfg.weight_decay and p.ndim >= 2:  # decay matrices only
+            upd = upd + cfg.weight_decay * p.astype(jnp.float32)
+        new_p.append((p.astype(jnp.float32) - lr * upd).astype(p.dtype))
+        new_m.append(_encode_moment(m, cfg.moment_dtype))
+        new_v.append(_encode_moment(v, cfg.moment_dtype))
+
+    params2 = jax.tree.unflatten(treedef, new_p)
+    state2 = {
+        "m": jax.tree.unflatten(treedef, new_m),
+        "v": jax.tree.unflatten(treedef, new_v),
+        "step": step,
+    }
+    return params2, state2, {"grad_norm": gnorm, "lr": lr}

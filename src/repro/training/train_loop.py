@@ -1,0 +1,139 @@
+"""Train-step factory: gradient accumulation (lax.scan over microbatches),
+block rematerialization, sharded-gradient hints, AdamW update.
+
+The returned step function is pure (params, opt_state, batch) -> (params,
+opt_state, metrics) and is meant to be ``jax.jit``-ed with NamedSharding
+in/out specs by the launcher (see launch/train.py and launch/dryrun.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models import transformer
+from ..models.model_zoo import ModelBundle
+from . import optimizer as opt
+
+Params = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    microbatch: int = 0  # global microbatch size; 0 = single shot
+    remat: bool = True
+    accum_dtype: str = "float32"
+
+
+def make_train_step(
+    mb: ModelBundle, opt_cfg: opt.AdamWConfig, train_cfg: TrainConfig
+) -> Callable:
+    if train_cfg.remat:
+        transformer.set_remat("block")
+
+    def loss_fn(params, batch):
+        loss, metrics = mb.loss_fn(params, batch)
+        return loss, metrics
+
+    def train_step(params, opt_state, batch):
+        bsz = batch["tokens"].shape[0]
+        n_micro = 1
+        if train_cfg.microbatch:
+            # Each microbatch must stay shardable over the FULL data-parallel
+            # degree, or SPMD involuntarily rematerializes (all-gathers) every
+            # accumulation step — round the microbatch size up to a multiple
+            # of dp that divides the global batch.
+            dp = _dp_degree()
+            mbsz = max(train_cfg.microbatch, dp)
+            mbsz = -(-mbsz // dp) * dp
+            while bsz % mbsz and mbsz < bsz:
+                mbsz += dp
+            n_micro = max(1, bsz // mbsz)
+        if n_micro > 1:
+            mbsz = bsz // n_micro
+
+            def split(x):
+                y = x.reshape((n_micro, mbsz) + x.shape[1:])
+                return _constrain_micro(y)
+
+            micro_batches = jax.tree.map(split, batch)
+            acc_dt = jnp.dtype(train_cfg.accum_dtype)
+
+            def micro(carry, mbatch):
+                gacc, lacc = carry
+                (loss, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, mbatch
+                )
+                gacc = jax.tree.map(lambda a, g: a + g.astype(acc_dt), gacc, grads)
+                return (gacc, lacc + loss), None
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, acc_dt), params)
+            (gsum, lsum), _ = jax.lax.scan(
+                micro, (zeros, jnp.zeros((), jnp.float32)), micro_batches
+            )
+            grads = jax.tree.map(lambda g: g / n_micro, gsum)
+            loss = lsum / n_micro
+        else:
+            (loss, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+
+        grads = _constrain_like(grads, params)
+        params2, opt_state2, om = opt.apply(params, grads, opt_state, opt_cfg)
+        return params2, opt_state2, {"loss": loss, **om}
+
+    return train_step
+
+
+def _dp_degree() -> int:
+    """Total data-parallel shards (pod x data) of the ambient mesh."""
+    from ..distribution import sharding
+
+    ctx = sharding.current()
+    if ctx is None:
+        return 1
+    mesh = ctx["mesh"]
+    n = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names:
+            n *= mesh.shape[a]
+    return n
+
+
+def _constrain_micro(y):
+    """Pin (n_micro, mbsz, ...) microbatch stacks: batch dim over data axes."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from ..distribution import sharding
+
+    ctx = sharding.current()
+    if ctx is None:
+        return y
+    mesh = ctx["mesh"]
+    daxes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    if not daxes or y.shape[1] % _dp_degree():
+        return y
+    spec = P(None, daxes if len(daxes) > 1 else daxes[0])
+    return jax.lax.with_sharding_constraint(
+        y, NamedSharding(mesh, P(*spec, *([None] * (y.ndim - 2))))
+    )
+
+
+def _constrain_like(grads: Params, params: Params) -> Params:
+    """Pin gradient shardings to the parameter shardings (ZeRO hint: with
+    fsdp rules this makes XLA emit reduce-scatter instead of all-reduce)."""
+    from ..distribution import sharding
+
+    ctx = sharding.current()
+    if ctx is None:
+        return grads
+    specs = sharding.param_specs(params, ctx["mesh"], ctx["fsdp"])
+    from jax.sharding import NamedSharding
+
+    return jax.tree.map(
+        lambda g, s: jax.lax.with_sharding_constraint(
+            g, NamedSharding(ctx["mesh"], s)
+        ),
+        grads,
+        specs,
+    )

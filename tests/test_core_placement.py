@@ -1,0 +1,351 @@
+"""Unit tests for the paper's placement library (core/)."""
+import pytest
+
+from repro.core.profiles import A100_80GB, H100_96GB
+from repro.core.state import ClusterState, GPUState, Workload
+from repro.core.preprocess import determine_free_partitions, merge_partitions
+from repro.core.indexing import assign_indexes, enumerate_feasible_multisets
+from repro.core import baselines, heuristic, metrics
+from repro.core.simulator import generate_test_case
+
+
+# ---------------------------------------------------------------------------
+# Table 1 / geometry
+# ---------------------------------------------------------------------------
+class TestProfiles:
+    def test_table1_allowed_indexes(self):
+        t = {p.profile_id: p.allowed_indexes for p in A100_80GB.profiles}
+        assert t[0] == (0,)
+        assert t[5] == (0,)
+        assert t[9] == (4, 0)
+        assert t[14] == (4, 0, 2)
+        assert t[15] == (6, 4, 0, 2)
+        assert t[19] == (6, 4, 5, 0, 1, 2, 3)
+        assert t[20] == (6, 4, 5, 0, 1, 2, 3)
+
+    def test_table1_slice_counts(self):
+        p = A100_80GB.by_id
+        assert (p[0].compute_slices, p[0].memory_slices) == (7, 8)
+        assert (p[5].compute_slices, p[5].memory_slices) == (4, 4)
+        assert (p[9].compute_slices, p[9].memory_slices) == (3, 4)
+        assert (p[14].compute_slices, p[14].memory_slices) == (2, 2)
+        assert (p[15].compute_slices, p[15].memory_slices) == (1, 2)
+        assert (p[19].compute_slices, p[19].memory_slices) == (1, 1)
+
+    def test_profile_names_track_memory(self):
+        assert A100_80GB.profile(9).name == "3g.40gb"
+        assert H100_96GB.profile(9).name == "3g.48gb"
+        assert A100_80GB.profile(15).name == "1g.20gb"
+
+    def test_compute_waste_semantics(self):
+        """Table 3 notes: p9@0 wastes 1 compute; p15 wastes 1 unless at 6."""
+        p9 = A100_80GB.profile(9)
+        assert p9.compute_waste_at(0) == 1
+        assert p9.compute_waste_at(4) == 0
+        p15 = A100_80GB.profile(15)
+        assert p15.compute_waste_at(6) == 0
+        assert p15.compute_waste_at(4) == 1
+        assert p15.compute_waste_at(0) == 1
+
+
+class TestGPUState:
+    def test_place_and_occupancy(self):
+        g = GPUState("g0")
+        g.place("a", 9, 4)  # 3g.40gb at index 4 -> mem {4,5,6,7}
+        occ = g.memory_occupancy()
+        assert occ == [None] * 4 + ["a"] * 4
+        assert g.free_gpu_slices() == [0, 1, 2, 3]
+
+    def test_overlap_rejected(self):
+        g = GPUState("g0")
+        g.place("a", 14, 4)  # 2g at 4 -> mem {4,5}
+        assert not g.can_place_at(A100_80GB.profile(9), 4)
+        with pytest.raises(ValueError):
+            g.place("b", 9, 4)
+
+    def test_illegal_index_rejected(self):
+        g = GPUState("g0")
+        assert not g.can_place_at(A100_80GB.profile(5), 3)  # 4g only at 0
+
+    def test_memory_waste_p19_at_6(self):
+        g = GPUState("g0")
+        g.place("a", 19, 6)  # strands m7
+        assert g.memory_waste() == 1
+        g2 = GPUState("g1")
+        g2.place("a", 15, 6)  # 1g.20gb claims m7
+        assert g2.memory_waste() == 0
+
+    def test_full_pack_no_waste(self):
+        """Placement 2 of Fig. 6: 4g@0, 2g@4, 1g.20gb@6 -> zero waste."""
+        g = GPUState("g0")
+        g.place("a", 5, 0)
+        g.place("b", 14, 4)
+        g.place("c", 15, 6)
+        assert g.compute_waste() == 0
+        assert g.memory_waste() == 0
+        assert g.free_gpu_slices() == []
+
+
+# ---------------------------------------------------------------------------
+# Assumption 1 + indexing
+# ---------------------------------------------------------------------------
+class TestAssumption1:
+    def test_every_binfeasible_multiset_is_indexable(self):
+        """The paper validated Assumption 1 exhaustively; so do we."""
+        profs = A100_80GB.profiles_sorted_desc()
+
+        def rec(i, counts):
+            if i == len(profs):
+                if counts:
+                    yield dict(counts)
+                return
+            p = profs[i]
+            limit = min(
+                A100_80GB.n_gpu_slices // p.compute_slices,
+                A100_80GB.n_memory_slices // p.memory_slices,
+            )
+            for n in range(limit + 1):
+                if n:
+                    counts[p.profile_id] = n
+                trial = dict(counts)
+                if A100_80GB.fits(trial):
+                    yield from rec(i + 1, counts)
+                if n:
+                    del counts[p.profile_id]
+
+        n_checked = 0
+        for counts in rec(0, {}):
+            flat = [pid for pid, n in counts.items() for _ in range(n)]
+            g = GPUState("probe")
+            assert assign_indexes(g, flat, optimize=False) is not None, counts
+            n_checked += 1
+        assert n_checked > 100  # the lattice is non-trivial
+
+    def test_catalog_size(self):
+        cat = enumerate_feasible_multisets(A100_80GB)
+        assert len(cat) == 127
+
+    def test_indexing_prefers_low_waste(self):
+        # one 3g.40gb alone: optimal index is 4 (no compute waste)
+        g = GPUState("g0")
+        (pl,) = assign_indexes(g, [9], ["w"])
+        assert pl.index == 4
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 1 (paper Fig. 7 examples)
+# ---------------------------------------------------------------------------
+class TestAlgorithm1:
+    def test_fig7_g1(self):
+        g1 = GPUState("g1")
+        g1.place("a", 19, 0)
+        g1.place("b", 19, 5)
+        g1.place("c", 19, 6)
+        parts = determine_free_partitions(g1)
+        got = [(p.start, p.compute_capacity, p.memory_capacity) for p in parts]
+        assert got == [(1, 1, 1), (2, 2, 2), (4, 1, 1)]
+
+    def test_fig7_g2_and_merge(self):
+        g2 = GPUState("g2")
+        g2.place("a", 15, 6)  # 1g.20gb in the last slice
+        parts = determine_free_partitions(g2)
+        got = [(p.start, p.compute_capacity, p.memory_capacity) for p in parts]
+        assert got == [(0, 4, 4), (4, 2, 2)]
+        merged = merge_partitions(parts, A100_80GB)
+        assert len(merged) == 1
+        assert merged[0].compute_capacity == 6
+        assert merged[0].memory_capacity == 6
+
+    def test_partition_admits(self):
+        g1 = GPUState("g1")
+        g1.place("a", 19, 0)
+        g1.place("b", 19, 5)
+        g1.place("c", 19, 6)
+        parts = determine_free_partitions(g1)
+        two_g = next(p for p in parts if p.compute_capacity == 2)
+        assert two_g.admits(A100_80GB.profile(14), A100_80GB)  # 2g.20gb@2
+        assert two_g.admits(A100_80GB.profile(15), A100_80GB)  # 1g.20gb@2
+        assert two_g.admits(A100_80GB.profile(19), A100_80GB)
+        assert not two_g.admits(A100_80GB.profile(9), A100_80GB)
+        assert not two_g.admits(A100_80GB.profile(5), A100_80GB)
+
+
+# ---------------------------------------------------------------------------
+# Use-case heuristics (paper Sec 4.2) + Fig. 3 behaviour
+# ---------------------------------------------------------------------------
+def _fig3_state():
+    st = ClusterState.homogeneous(2)
+    st.add_workload(Workload("e1", 9))
+    st.gpus["gpu0"].place("e1", 9, 4)  # GPU1: slices 0-3 free
+    st.add_workload(Workload("e2", 5))
+    st.gpus["gpu1"].place("e2", 5, 0)  # GPU2: slices 4-7 free
+    return st
+
+
+class TestInitialDeployment:
+    def test_fig3_first_fit_blocks_the_4g(self):
+        st = _fig3_state()
+        w1 = Workload("w1", 9)
+        w2 = Workload("w2", 5)
+        pending = baselines.first_fit(st, [w1, w2])
+        assert [w.wid for w in pending] == ["w2"]  # stuck pending
+
+    def test_fig3_rule_based_avoids_blocking(self):
+        st = _fig3_state()
+        w1 = Workload("w1", 9)
+        w2 = Workload("w2", 5)
+        pending = heuristic.initial_deployment(st, [w1, w2])
+        assert pending == []
+        assert st.gpu_of("w1") == "gpu1"  # 3g lands next to the 4g
+        assert st.gpu_of("w2") == "gpu0"
+        m = metrics.evaluate(st)
+        assert m.compute_wastage == 0
+
+    def test_descending_size_order(self):
+        st = ClusterState.homogeneous(1)
+        ws = [Workload("s", 19), Workload("b", 5), Workload("m", 14)]
+        pending = heuristic.initial_deployment(st, ws)
+        assert pending == []
+        st.validate()
+
+
+class TestCompaction:
+    def test_vacates_underutilized_gpu(self):
+        st = ClusterState.homogeneous(3)
+        for gid, wid, pid, idx in [
+            ("gpu0", "a", 5, 0),  # 4g
+            ("gpu1", "b", 9, 4),  # 3g
+            ("gpu2", "c", 14, 4),  # 2g on its own GPU
+        ]:
+            st.add_workload(Workload(wid, pid))
+            st.gpus[gid].place(wid, pid, idx)
+        init = st.clone()
+        heuristic.compaction(st)
+        m = metrics.evaluate(st, init)
+        assert m.n_gpus == 2
+        assert m.sequential_migrations == 0
+
+    def test_no_compaction_when_full(self):
+        st = ClusterState.homogeneous(2)
+        for gid in ("gpu0", "gpu1"):
+            st.add_workload(Workload(f"w{gid}", 0))
+            st.gpus[gid].place(f"w{gid}", 0, 0)
+        init = st.clone()
+        heuristic.compaction(st)
+        assert metrics.evaluate(st, init).n_gpus == 2
+
+    def test_free_gpu_fallback_saves_net_one(self):
+        """Paper Fig. 8: direct vacate impossible, but 1 borrowed free GPU
+        lets two GPUs be vacated."""
+        st = ClusterState.homogeneous(4)
+        # gpu0: 3g@0 (waste) + 3g@4 ; gpu1: same -> each has 0 free slices
+        for gid in ("gpu0", "gpu1"):
+            for i, idx in enumerate((0, 4)):
+                wid = f"{gid}w{i}"
+                st.add_workload(Workload(wid, 9))
+                st.gpus[gid].place(wid, 9, idx)
+        # gpu2, gpu3 free
+        init = st.clone()
+        heuristic.compaction(st)
+        m = metrics.evaluate(st, init)
+        assert m.n_gpus <= 2
+
+
+class TestReconfiguration:
+    def test_zero_waste_after_reconfig(self):
+        """Fig. 5: reconfiguration eliminates all wastage."""
+        st = ClusterState.homogeneous(6)
+        # Deliberately wasteful initial layout on 3 GPUs.
+        layout = [
+            ("gpu0", "w1", 5, 0),
+            ("gpu1", "w2", 9, 0),  # wastes a compute slice
+            ("gpu1", "w3", 15, 4),  # wastes a compute slice
+            ("gpu2", "w4", 14, 4),
+            ("gpu2", "w5", 19, 6),  # strands m7
+        ]
+        for gid, wid, pid, idx in layout:
+            st.add_workload(Workload(wid, pid))
+            st.gpus[gid].place(wid, pid, idx)
+        init = st.clone()
+        heuristic.reconfiguration(st)
+        m = metrics.evaluate(st, init)
+        assert m.n_gpus == 2
+        assert m.compute_wastage == 0
+        assert m.memory_wastage == 0
+
+    def test_min_gpus_eq3(self):
+        ws = [Workload(f"w{i}", 19) for i in range(15)]  # 15 mem slices
+        assert heuristic.min_gpus_needed(A100_80GB, ws) == 3  # ceil(15/7)=3
+
+
+# ---------------------------------------------------------------------------
+# Metrics
+# ---------------------------------------------------------------------------
+class TestMetrics:
+    def test_sequential_migration_detection(self):
+        init = ClusterState.homogeneous(2)
+        init.add_workload(Workload("a", 5))
+        init.gpus["gpu0"].place("a", 5, 0)
+        init.add_workload(Workload("b", 9))
+        init.gpus["gpu1"].place("b", 9, 4)
+        # final: a moved to gpu1@0 (free in initial -> one-shot),
+        #        b moved to gpu0@4 (was free in initial -> one-shot)
+        final = init.clone()
+        final.gpus["gpu0"].remove("a")
+        final.gpus["gpu1"].remove("b")
+        final.gpus["gpu1"].place("a", 5, 0)
+        final.gpus["gpu0"].place("b", 9, 4)
+        m = metrics.evaluate(final, init)
+        assert m.n_migrations == 2
+        assert m.sequential_migrations == 0
+        # now a move into a spot that was occupied initially
+        final2 = init.clone()
+        final2.gpus["gpu1"].remove("b")
+        final2.gpus["gpu0"].place("b", 9, 4)
+        m2 = metrics.evaluate(final2, init)
+        assert m2.sequential_migrations == 0  # gpu0@4 was free initially
+        final3 = init.clone()
+        final3.gpus["gpu0"].remove("a")
+        final3.gpus["gpu1"].remove("b")
+        final3.gpus["gpu1"].place("a", 5, 0)  # where b sat (overlaps mem 4-7? no: 4g@0 covers 0-3)
+        final3.gpus["gpu1"].place("b", 9, 4)
+        m3 = metrics.evaluate(final3, init)
+        # a->gpu1@0 one-shot (0-3 free initially); b stays (same gpu+index)
+        assert m3.n_migrations == 1 and m3.sequential_migrations == 0
+
+    def test_utilization_over_used_gpus_only(self):
+        st = ClusterState.homogeneous(3)
+        st.add_workload(Workload("a", 0))
+        st.gpus["gpu0"].place("a", 0, 0)
+        m = metrics.evaluate(st)
+        assert m.n_gpus == 1
+        assert m.memory_utilization == 1.0
+        assert m.compute_utilization == 1.0
+
+    def test_pending_reduces_availability(self):
+        st = ClusterState.homogeneous(1)
+        st.add_workload(Workload("a", 0))
+        st.gpus["gpu0"].place("a", 0, 0)
+        missing = Workload("zz", 14)
+        m = metrics.evaluate(st, None, [st.workloads["a"], missing])
+        assert m.pending_model_size == 2
+        assert m.availability == -2
+
+
+# ---------------------------------------------------------------------------
+# Simulator
+# ---------------------------------------------------------------------------
+class TestSimulator:
+    def test_deterministic(self):
+        a = generate_test_case(42, n_gpus=8)
+        b = generate_test_case(42, n_gpus=8)
+        assert [w.wid for w in a.new_workloads] == [w.wid for w in b.new_workloads]
+        assert {g.gid: len(g.placements) for g in a.initial.gpus.values()} == {
+            g.gid: len(g.placements) for g in b.initial.gpus.values()
+        }
+
+    def test_allocation_fraction(self):
+        tc = generate_test_case(7, n_gpus=80)
+        used = len(tc.initial.used_gpus())
+        assert 40 <= used <= 56  # ~60% of 80
+        tc.initial.validate()

@@ -1,0 +1,102 @@
+"""Hypothesis property tests for placement-system invariants."""
+import hypothesis.strategies as st
+from hypothesis import HealthCheck, given, settings
+
+from repro.core import baselines, heuristic, metrics
+from repro.core.indexing import assign_indexes
+from repro.core.profiles import A100_80GB
+from repro.core.state import ClusterState, GPUState, Workload
+
+_POOL = [5, 9, 14, 15, 19]
+_SETTINGS = dict(
+    max_examples=40,
+    deadline=None,
+    suppress_health_check=[HealthCheck.too_slow],
+)
+
+workload_lists = st.lists(
+    st.sampled_from(_POOL), min_size=1, max_size=20
+).map(lambda pids: [Workload(f"w{i}", p) for i, p in enumerate(pids)])
+
+
+@given(workload_lists, st.integers(1, 6))
+@settings(**_SETTINGS)
+def test_initial_deployment_invariants(ws, n_gpus):
+    st_ = ClusterState.homogeneous(n_gpus)
+    pending = heuristic.initial_deployment(st_, ws)
+    st_.validate()  # no overlaps, only allowed indexes
+    placed = {p.wid for g in st_.gpus.values() for p in g.placements}
+    assert placed | {w.wid for w in pending} == {w.wid for w in ws}
+    assert placed & {w.wid for w in pending} == set()
+    m = metrics.evaluate(st_, None, ws)
+    assert 0.0 <= m.memory_utilization <= 1.0
+    assert 0.0 <= m.compute_utilization <= 1.0
+    assert m.compute_wastage >= 0 and m.memory_wastage >= 0
+
+
+@given(workload_lists, st.integers(1, 6))
+@settings(**_SETTINGS)
+def test_baselines_feasibility(ws, n_gpus):
+    for placer in (baselines.first_fit, baselines.load_balanced):
+        st_ = ClusterState.homogeneous(n_gpus)
+        placer(st_, ws)
+        st_.validate()
+
+
+@given(workload_lists)
+@settings(**_SETTINGS)
+def test_rule_based_never_uses_more_gpus_than_first_fit(ws):
+    """Sec 4.2's sorting + max-utilization packing dominates first-fit."""
+    n = len(ws)  # plenty of GPUs so nothing is pending
+    a = ClusterState.homogeneous(n)
+    heuristic.initial_deployment(a, ws)
+    b = ClusterState.homogeneous(n)
+    baselines.first_fit(b, ws)
+    assert metrics.evaluate(a).n_gpus <= metrics.evaluate(b).n_gpus
+
+
+@given(st.lists(st.sampled_from(_POOL + [0, 20]), min_size=1, max_size=7))
+@settings(**_SETTINGS)
+def test_assumption1_on_random_multisets(pids):
+    """fits() == indexable for random multisets (Assumption 1)."""
+    counts = {}
+    for p in pids:
+        counts[p] = counts.get(p, 0) + 1
+    g = GPUState("probe")
+    indexable = assign_indexes(g, pids, optimize=False) is not None
+    assert indexable == A100_80GB.fits(counts)
+
+
+@given(workload_lists, st.integers(2, 5))
+@settings(max_examples=20, deadline=None)
+def test_compaction_never_increases_gpus_or_breaks_state(ws, n_gpus):
+    st_ = ClusterState.homogeneous(n_gpus)
+    heuristic.initial_deployment(st_, ws)
+    placed_before = {p.wid for g in st_.gpus.values() for p in g.placements}
+    before = metrics.evaluate(st_).n_gpus
+    init = st_.clone()
+    heuristic.compaction(st_)
+    st_.validate()
+    placed_after = {p.wid for g in st_.gpus.values() for p in g.placements}
+    assert placed_after == placed_before  # nothing lost
+    m = metrics.evaluate(st_, init)
+    assert m.n_gpus <= before
+    assert m.sequential_migrations == 0  # heuristic is one-shot by design
+
+
+@given(workload_lists)
+@settings(max_examples=20, deadline=None)
+def test_reconfiguration_meets_lower_bound_plus_slack(ws):
+    n = max(2 * len(ws), 4)
+    st_ = ClusterState.homogeneous(n)
+    pending = heuristic.initial_deployment(st_, ws)
+    if pending:
+        return
+    init = st_.clone()
+    heuristic.reconfiguration(st_)
+    st_.validate()
+    lb = heuristic.min_gpus_needed(A100_80GB, ws)
+    m = metrics.evaluate(st_, init)
+    assert lb <= m.n_gpus <= lb + 1  # FFD on these profiles stays near-optimal
+    placed = {p.wid for g in st_.gpus.values() for p in g.placements}
+    assert placed == {w.wid for w in ws}

@@ -1,0 +1,201 @@
+"""WPM MIP, pattern solver, B&B fallback, and migration-planner tests."""
+import numpy as np
+import pytest
+
+from repro.core import metrics
+from repro.core.migration import plan_migration
+from repro.core.patterns import pattern_catalog, reconfigure_patterns
+from repro.core.profiles import A100_80GB
+from repro.core.simulator import generate_test_case
+from repro.core.state import ClusterState, GPUState, Workload
+from repro.core import wpm_mip
+from repro.core.wpm_mip import solve_wpm
+
+
+def _all_wl(tc):
+    return list(tc.initial.workloads.values()) + tc.new_workloads
+
+
+class TestWPM:
+    def test_initial_deployment_places_when_capacity_exists(self):
+        st = ClusterState.homogeneous(2)
+        news = [Workload("a", 5), Workload("b", 9), Workload("c", 14), Workload("d", 15)]
+        res = solve_wpm(st, news, movable=False, allow_reconfig=False)
+        assert res.pending == []
+        res.state.validate()
+        m = metrics.evaluate(res.state, st, news)
+        assert m.n_gpus <= 2
+        assert m.compute_wastage == 0
+
+    def test_respects_existing_partition_geometry(self):
+        """New 4g workload cannot land on a GPU whose index-0 span is cut."""
+        st = ClusterState.homogeneous(1)
+        st.add_workload(Workload("e", 19))
+        st.gpus["gpu0"].place("e", 19, 2)  # blocks memory position 2
+        res = solve_wpm(st, [Workload("n", 5)], movable=False, allow_reconfig=False)
+        assert [w.wid for w in res.pending] == ["n"]  # 4g fits only at idx 0
+
+    def test_joint_mip_beats_or_matches_fixed_mip(self):
+        for seed in (0, 1, 2):
+            tc = generate_test_case(seed, n_gpus=8)
+            fixed = solve_wpm(
+                tc.initial.clone(), tc.new_workloads, movable=False, allow_reconfig=False
+            )
+            joint = solve_wpm(
+                tc.initial.clone(), tc.new_workloads, movable=True, allow_reconfig=True
+            )
+            mf = metrics.evaluate(fixed.state, tc.initial, _all_wl(tc))
+            mj = metrics.evaluate(joint.state, tc.initial, _all_wl(tc))
+            assert mj.pending_model_size <= mf.pending_model_size
+
+    def test_compaction_mode_reduces_gpus(self):
+        st = ClusterState.homogeneous(3)
+        for gid, wid, pid, idx in [
+            ("gpu0", "a", 5, 0),
+            ("gpu1", "b", 9, 4),
+            ("gpu2", "c", 14, 4),
+        ]:
+            st.add_workload(Workload(wid, pid))
+            st.gpus[gid].place(wid, pid, idx)
+        res = solve_wpm(st.clone(), (), movable=True, allow_reconfig=True)
+        m = metrics.evaluate(res.state, st, list(st.workloads.values()))
+        assert m.n_gpus == 2
+        assert m.n_pending == 0
+
+    def test_migration_only_when_gpu_saved(self):
+        """Penalty ordering: a lone full GPU must not shuffle workloads."""
+        st = ClusterState.homogeneous(2)
+        st.add_workload(Workload("a", 5))
+        st.gpus["gpu0"].place("a", 5, 0)
+        st.add_workload(Workload("b", 9))
+        st.gpus["gpu0"].place("b", 9, 4)  # gpu0 fully packed, zero waste
+        res = solve_wpm(st.clone(), (), movable=True, allow_reconfig=True)
+        m = metrics.evaluate(res.state, st, list(st.workloads.values()))
+        assert m.n_migrations == 0
+
+    def test_all_existing_remain_placed(self):
+        for seed in (3, 4):
+            tc = generate_test_case(seed, n_gpus=8)
+            res = solve_wpm(tc.initial.clone(), (), movable=True, allow_reconfig=True)
+            placed = {
+                p.wid for g in res.state.gpus.values() for p in g.placements
+            }
+            assert placed == set(tc.initial.workloads)
+
+
+class TestPatternSolver:
+    def test_catalog(self):
+        cat = pattern_catalog(A100_80GB)
+        assert len(cat) == 127
+        # patterns carry index-accurate waste
+        full = next(
+            p for p in cat if p.counts == ((5, 1), (14, 1), (15, 1))
+        )
+        assert full.compute_waste == 0 and full.memory_waste == 0
+
+    @pytest.mark.parametrize("seed", [0, 1, 5])
+    def test_never_worse_than_heuristic(self, seed):
+        from repro.core import heuristic
+
+        tc = generate_test_case(seed, n_gpus=8)
+        pat = reconfigure_patterns(tc.initial.clone())
+        hs = tc.initial.clone()
+        heuristic.reconfiguration(hs)
+        mp = metrics.evaluate(pat.state, tc.initial)
+        mh = metrics.evaluate(hs, tc.initial)
+        obj_p = 100 * mp.n_gpus + 10 * (mp.compute_wastage + mp.memory_wastage)
+        obj_h = 100 * mh.n_gpus + 10 * (mh.compute_wastage + mh.memory_wastage)
+        assert obj_p <= obj_h
+
+    def test_scales_independent_of_cluster_size(self):
+        tc = generate_test_case(9, n_gpus=80)
+        res = reconfigure_patterns(tc.initial.clone())
+        assert res.status == "optimal"
+        assert res.solve_seconds < 5.0
+
+
+class TestBBFallback:
+    def test_matches_scipy_on_small_instances(self, monkeypatch):
+        for seed in (3, 11):
+            tc = generate_test_case(seed, n_gpus=3)
+            news = tc.new_workloads[:3]
+            ref = solve_wpm(
+                tc.initial.clone(), news, movable=False, allow_reconfig=False
+            )
+            monkeypatch.setattr(
+                wpm_mip._Model,
+                "_solve_scipy",
+                lambda self, *a: (_ for _ in ()).throw(ImportError()),
+            )
+            got = solve_wpm(
+                tc.initial.clone(),
+                news,
+                movable=False,
+                allow_reconfig=False,
+                time_limit=120,
+            )
+            monkeypatch.undo()
+            assert abs(ref.objective - got.objective) < 1e-6
+            assert got.status == "optimal"
+
+
+class TestMigrationPlanner:
+    def _replay(self, initial, plan):
+        """Execute the plan wave by wave, asserting feasibility throughout."""
+        st = initial.clone()
+        # disruptive moves: drain first
+        for mv in plan.disruptive:
+            if mv.src_gid is not None:
+                st.gpus[mv.src_gid].remove(mv.wid)
+        for wave in plan.waves:
+            # all moves in a wave must be simultaneously executable
+            for mv in wave:
+                if mv.src_gid is not None:
+                    st.gpus[mv.src_gid].remove(mv.wid)
+            for mv in wave:
+                prof = st.gpus[mv.dst_gid].device.profile(mv.profile_id)
+                assert st.gpus[mv.dst_gid].can_place_at(prof, mv.dst_index), mv
+                st.gpus[mv.dst_gid].placements.append(
+                    __import__("repro.core.state", fromlist=["Placement"]).Placement(
+                        mv.wid, mv.profile_id, mv.dst_index
+                    )
+                )
+        for mv in plan.disruptive:
+            prof = st.gpus[mv.dst_gid].device.profile(mv.profile_id)
+            assert st.gpus[mv.dst_gid].can_place_at(prof, mv.dst_index)
+            st.place(mv.wid, mv.dst_gid, mv.dst_index)
+        return st
+
+    @pytest.mark.parametrize("seed", [0, 2, 8])
+    def test_plan_replays_to_final_state(self, seed):
+        tc = generate_test_case(seed, n_gpus=8)
+        res = reconfigure_patterns(tc.initial.clone())
+        plan = plan_migration(tc.initial, res.state)
+        st = self._replay(tc.initial, plan)
+        # same placement sets
+        want = {
+            (gid, p.wid, p.index)
+            for gid, g in res.state.gpus.items()
+            for p in g.placements
+        }
+        got = {
+            (gid, p.wid, p.index)
+            for gid, g in st.gpus.items()
+            for p in g.placements
+        }
+        assert want == got
+
+    def test_swap_needs_disruption(self):
+        """Two full GPUs swapping contents cannot be done non-disruptively."""
+        init = ClusterState.homogeneous(2)
+        init.add_workload(Workload("a", 0))
+        init.gpus["gpu0"].place("a", 0, 0)
+        init.add_workload(Workload("b", 0))
+        init.gpus["gpu1"].place("b", 0, 0)
+        final = ClusterState.homogeneous(2)
+        final.workloads = dict(init.workloads)
+        final.gpus["gpu0"].place("b", 0, 0)
+        final.gpus["gpu1"].place("a", 0, 0)
+        plan = plan_migration(init, final)
+        assert len(plan.disruptive) == 1
+        self._replay(init, plan)
