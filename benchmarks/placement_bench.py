@@ -1,7 +1,7 @@
 """Paper Sec-5 evaluation: Figures 9 (initial deployment), 10 (compaction),
 11 (reconfiguration), on 8-GPU and 80-GPU clusters, 100 random test cases.
 
-Approaches (paper Sec 5.1):
+Approaches (paper Sec 5.1) — all routed through core.engine.PlacementEngine:
   first_fit      — GPUs/workloads by id, indexes from 0
   load_balanced  — GPUs by joint slice utilization ascending, indexes from 0
   rule_based     — Sec-4.2 heuristic (ours)
@@ -12,171 +12,27 @@ Approaches (paper Sec 5.1):
 Every approach is scored with the Table-3 metrics averaged over test cases,
 then normalized against the highest value per metric (as the paper plots).
 
-Usage: python -m benchmarks.placement_bench --case initial --gpus 8 --cases 100
+Usage:
+  python -m benchmarks.placement_bench --case initial --gpus 8 --cases 100
+  python -m benchmarks.placement_bench --trace --gpus 8 --tpu-pods 2 \\
+      --horizon 200 --policies first_fit load_balanced rule_based
+
+``--trace`` switches to the online mode: a seeded arrival/departure/burst
+trace over a mixed A100 + TPU-pod fleet, periodic compaction with an
+optional migration budget, reporting time-averaged GPUs-used and wastage.
 """
 from __future__ import annotations
 
 import argparse
 import time
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Dict, Optional, Sequence
 
-from repro.core import baselines, heuristic, metrics
-from repro.core.migration import plan_migration
-from repro.core.patterns import reconfigure_patterns
+from repro.core import metrics
+from repro.core.engine import PlacementEngine
+from repro.core.events import OnlineSimulator, build_fleet, generate_trace
+from repro.core.profiles import A100_80GB
 from repro.core.simulator import TestCase, generate_test_case
-from repro.core.state import ClusterState, GPUState, Workload
-from repro.core.wpm_mip import solve_wpm
-
-# ---------------------------------------------------------------------------
-# baseline compaction / reconfiguration replays (paper Sec 5.2.2/5.2.3)
-# ---------------------------------------------------------------------------
-def _spot_first_fit(state: ClusterState, w: Workload, candidates) -> Optional[Tuple[str, int]]:
-    for gid in sorted(candidates):
-        idx = baselines._try_place(state.gpus[gid], w, numeric_order=True)
-        if idx is not None:
-            return gid, idx
-    return None
-
-
-def _spot_load_balanced(state, w, candidates) -> Optional[Tuple[str, int]]:
-    ordered = sorted(
-        candidates, key=lambda gid: (state.gpus[gid].joint_slice_utilization(), gid)
-    )
-    for gid in ordered:
-        idx = baselines._try_place(state.gpus[gid], w, numeric_order=True)
-        if idx is not None:
-            return gid, idx
-    return None
-
-
-_SPOTS: Dict[str, Callable] = {
-    "first_fit": _spot_first_fit,
-    "load_balanced": _spot_load_balanced,
-}
-
-
-def baseline_compaction(state: ClusterState, policy: str) -> None:
-    """Compaction replay with a baseline placement rule: vacate the least
-    utilized GPU into other allocated GPUs, placing per ``policy``."""
-    spot = _SPOTS[policy]
-    progress = True
-    while progress:
-        progress = False
-        used = sorted(
-            state.used_gpus(), key=lambda g: (g.joint_slice_utilization(), g.gid)
-        )
-        for gpu in used:
-            others = [g.gid for g in state.used_gpus() if g.gid != gpu.gid]
-            trial = state.clone()
-            moves = []
-            ok = True
-            for pl in list(trial.gpus[gpu.gid].placements):
-                w = trial.workloads[pl.wid]
-                trial.gpus[gpu.gid].remove(pl.wid)
-                s = spot(trial, w, others)
-                if s is None:
-                    ok = False
-                    break
-                trial.place(w.wid, *s)
-                moves.append((w.wid, *s))
-            # one-shot property: destinations must be free in the real state
-            if ok:
-                for wid, dst, idx in moves:
-                    prof = state.gpus[dst].device.profile(
-                        state.workloads[wid].profile_id
-                    )
-                    if not state.gpus[dst].can_place_at(prof, idx):
-                        ok = False
-                        break
-            if ok:
-                for wid, dst, idx in moves:
-                    state.gpus[gpu.gid].remove(wid)
-                    state.place(wid, dst, idx)
-                progress = True
-                break
-
-
-def baseline_reconfiguration(state: ClusterState, policy: str) -> List[Workload]:
-    """Reconfiguration replay: re-place ALL workloads from scratch with the
-    baseline rule (arrival order, indexes from 0 — paper Sec 5.2.3)."""
-    device = next(iter(state.gpus.values())).device
-    workloads = state.placed_workloads()
-    fresh = ClusterState(
-        gpus={gid: GPUState(gid, device) for gid in state.gpus},
-        workloads={w.wid: w for w in workloads},
-    )
-    fn = baselines.first_fit if policy == "first_fit" else baselines.load_balanced
-    pending = fn(fresh, workloads)
-    state.gpus = fresh.gpus
-    state.workloads = fresh.workloads
-    return pending
-
-
-# ---------------------------------------------------------------------------
-# per-use-case runners: (test case) -> final state (+ pending, solve time)
-# ---------------------------------------------------------------------------
-def _run_initial(tc: TestCase, approach: str, time_limit: float):
-    st = tc.initial.clone()
-    t0 = time.time()
-    if approach == "first_fit":
-        pending = baselines.first_fit(st, tc.new_workloads)
-    elif approach == "load_balanced":
-        pending = baselines.load_balanced(st, tc.new_workloads)
-    elif approach == "rule_based":
-        pending = heuristic.initial_deployment(st, tc.new_workloads)
-    elif approach == "mip":
-        res = solve_wpm(st, tc.new_workloads, movable=False, allow_reconfig=False,
-                        time_limit=time_limit)
-        st, pending = res.state, res.pending
-    elif approach == "joint_mip":
-        res = solve_wpm(st, tc.new_workloads, movable=True, allow_reconfig=True,
-                        time_limit=time_limit)
-        st, pending = res.state, res.pending
-    else:
-        raise ValueError(approach)
-    return st, pending, time.time() - t0
-
-
-def _run_compaction(tc: TestCase, approach: str, time_limit: float):
-    st = tc.initial.clone()
-    t0 = time.time()
-    if approach in _SPOTS:
-        baseline_compaction(st, approach)
-    elif approach == "rule_based":
-        heuristic.compaction(st)
-    elif approach == "mip":
-        res = solve_wpm(st, (), movable=True, allow_reconfig=True,
-                        time_limit=time_limit)
-        st = res.state
-    else:
-        raise ValueError(approach)
-    return st, [], time.time() - t0
-
-
-def _run_reconfiguration(tc: TestCase, approach: str, time_limit: float):
-    st = tc.initial.clone()
-    t0 = time.time()
-    if approach in _SPOTS:
-        pending = baseline_reconfiguration(st, approach)
-    elif approach == "rule_based":
-        pending = heuristic.reconfiguration(st)
-    elif approach == "mip":
-        res = solve_wpm(st, (), movable=True, allow_reconfig=True,
-                        time_limit=time_limit)
-        st, pending = res.state, res.pending
-    elif approach == "patterns":
-        res = reconfigure_patterns(st, time_limit=time_limit)
-        st, pending = res.state, []
-    else:
-        raise ValueError(approach)
-    return st, pending, time.time() - t0
-
-
-_RUNNERS = {
-    "initial": _run_initial,
-    "compaction": _run_compaction,
-    "reconfiguration": _run_reconfiguration,
-}
+from repro.core.tpu_profiles import TPU_V5E_POD
 
 APPROACHES = {
     "initial": ("first_fit", "load_balanced", "rule_based", "mip", "joint_mip"),
@@ -191,6 +47,21 @@ _METRICS = (
 )
 
 
+def _run(case: str, tc: TestCase, approach: str, time_limit: float):
+    """One test case through the unified engine; returns (state, pending, secs)."""
+    st = tc.initial.clone()
+    eng = PlacementEngine(approach, time_limit=time_limit)
+    if case == "initial":
+        res = eng.deploy(st, tc.new_workloads)
+    elif case == "compaction":
+        res = eng.compact(st)
+    elif case == "reconfiguration":
+        res = eng.reconfigure(st)
+    else:
+        raise ValueError(case)
+    return st, res.pending, res.seconds
+
+
 def run_case(
     case: str,
     n_gpus: int,
@@ -201,7 +72,6 @@ def run_case(
 ) -> Dict[str, Dict[str, float]]:
     """Returns {approach: {metric: mean}} plus solve-time and seq-migration."""
     approaches = approaches or APPROACHES[case]
-    runner = _RUNNERS[case]
     sums: Dict[str, Dict[str, float]] = {a: {m: 0.0 for m in _METRICS} for a in approaches}
     counts: Dict[str, int] = {a: 0 for a in approaches}
     for a in approaches:
@@ -216,7 +86,7 @@ def run_case(
             all_wl = list(tc.initial.workloads.values())
             if case == "initial":
                 all_wl += list(tc.new_workloads)
-            final, pending, secs = runner(tc, a, time_limit)
+            final, pending, secs = _run(case, tc, a, time_limit)
             final.validate()
             m = metrics.evaluate(final, tc.initial, all_wl)
             for k in _METRICS:
@@ -252,6 +122,67 @@ def print_table(case: str, n_gpus: int, table: Dict[str, Dict[str, float]]) -> N
         print(line)
 
 
+# ---------------------------------------------------------------------------
+# online trace mode (--trace)
+# ---------------------------------------------------------------------------
+#: TraceStats field -> short column label
+_TRACE_COLS = {
+    "time_avg_gpus_used": "avg_gpus",
+    "time_avg_compute_waste": "avg_cwaste",
+    "time_avg_memory_waste": "avg_mwaste",
+    "time_avg_mem_occupancy": "avg_mem_occ",
+    "peak_gpus_used": "peak_gpus",
+    "n_placed": "placed",
+    "n_rejected": "rejected",
+    "n_migrations": "migrations",
+    "n_compactions": "compactions",
+    "n_compactions_skipped": "skipped",
+    "engine_seconds": "engine_s",
+}
+
+
+def run_trace(
+    policies: Sequence[str],
+    n_a100: int,
+    n_tpu_pods: int,
+    seed: int,
+    horizon: float,
+    arrival_rate: float,
+    mean_lifetime: float,
+    compact_every: Optional[float],
+    migration_budget: Optional[int],
+    time_limit: float,
+) -> Dict[str, Dict[str, float]]:
+    spec = [(A100_80GB, n_a100)]
+    if n_tpu_pods:
+        spec.append((TPU_V5E_POD, n_tpu_pods))
+    out: Dict[str, Dict[str, float]] = {}
+    for policy in policies:
+        fleet = build_fleet(spec)
+        trace = generate_trace(
+            seed, fleet, horizon=horizon, arrival_rate=arrival_rate,
+            mean_lifetime=mean_lifetime,
+        )
+        sim = OnlineSimulator(
+            fleet,
+            PlacementEngine(policy, time_limit=time_limit),
+            compact_every=compact_every,
+            migration_budget=migration_budget,
+        )
+        stats = sim.run(trace)
+        fleet.validate()
+        out[policy] = {k: float(getattr(stats, k)) for k in _TRACE_COLS}
+    return out
+
+
+def print_trace_table(table: Dict[str, Dict[str, float]], header: str) -> None:
+    print(f"\n== online trace: {header} ==")
+    cols = list(next(iter(table.values())).keys())
+    print("policy".ljust(15) + "".join(_TRACE_COLS[c].rjust(13) for c in cols))
+    for a, row in table.items():
+        print(a.ljust(15) + "".join(f"{row[c]:13.3f}" for c in cols))
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--case", default="all",
@@ -261,7 +192,37 @@ def main() -> None:
     ap.add_argument("--mip-cases", type=int, default=None,
                     help="cap test cases for MIP approaches (big clusters)")
     ap.add_argument("--time-limit", type=float, default=30.0)
+    # online trace mode
+    ap.add_argument("--trace", action="store_true",
+                    help="online arrival/departure trace over a mixed fleet")
+    ap.add_argument("--policies", nargs="+",
+                    default=["first_fit", "load_balanced", "rule_based"])
+    ap.add_argument("--tpu-pods", type=int, default=2,
+                    help="TPU v5e pods to add next to the --gpus A100s")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--horizon", type=float, default=200.0)
+    ap.add_argument("--arrival-rate", type=float, default=1.0)
+    ap.add_argument("--mean-lifetime", type=float, default=40.0)
+    ap.add_argument("--compact-every", type=float, default=25.0)
+    ap.add_argument("--migration-budget", type=int, default=None)
     args = ap.parse_args()
+
+    if args.trace:
+        n_a100 = args.gpus[0]
+        t0 = time.time()
+        table = run_trace(
+            args.policies, n_a100, args.tpu_pods, args.seed, args.horizon,
+            args.arrival_rate, args.mean_lifetime,
+            args.compact_every if args.compact_every > 0 else None,
+            args.migration_budget, args.time_limit,
+        )
+        print_trace_table(
+            table,
+            f"{n_a100}x A100 + {args.tpu_pods}x TPU pod, horizon {args.horizon}",
+        )
+        print(f"   ({time.time() - t0:.0f}s)")
+        return
+
     cases = (
         ["initial", "compaction", "reconfiguration"]
         if args.case == "all" else [args.case]

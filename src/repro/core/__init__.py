@@ -13,6 +13,9 @@ Public API:
     metrics      — Table-3 evaluation metrics
     migration    — migration planning (one-shot vs sequential)
     simulator    — Sec-5.1 random test-case generation
+    engine       — PlacementEngine: all approaches behind one interface
+    events       — event-driven online simulation over timestamped traces
 """
+from .engine import EngineResult, PlacementEngine, available_policies  # noqa: F401
 from .profiles import A100_80GB, H100_96GB, DeviceModel, Profile  # noqa: F401
-from .state import ClusterState, GPUState, Placement, Workload  # noqa: F401
+from .state import ClusterState, GPUState, Placement, Transaction, Workload  # noqa: F401

@@ -1,0 +1,432 @@
+"""PlacementEngine: every placement approach behind one interface.
+
+The paper evaluates five approaches (first-fit, load-balanced, the Sec-4.2
+rule-based heuristic, the WPM MIP, and the beyond-paper pattern solver)
+across three use cases (initial deployment, compaction, reconfiguration).
+The seed codebase dispatched to them ad hoc from three different layers;
+this module is now the single entry point:
+
+    engine = PlacementEngine("rule_based")
+    engine.deploy(state, new_workloads)   # Sec 2.3.1
+    engine.compact(state)                 # Sec 2.3.2
+    engine.reconfigure(state)             # Sec 2.3.3
+
+All verbs mutate ``state`` in place (MIP/pattern results are adopted into
+the passed state) and return an ``EngineResult``.  Heterogeneous fleets —
+GPUs with different ``DeviceModel``s in one ``ClusterState`` — are handled
+here: the engine partitions the cluster by device model, routes each
+workload to its compatible group (``Workload.device_kind``), and runs the
+policy per group, so the policy implementations stay single-device.
+
+Baseline compaction/reconfiguration replays (paper Sec 5.2.2/5.2.3) used to
+live in the benchmark harness; they are policy methods now, built on the
+transactional state instead of whole-cluster clones.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Type
+
+from . import baselines, heuristic
+from .state import ClusterState, GPUState, Workload
+
+__all__ = [
+    "EngineResult",
+    "PlacementPolicy",
+    "PlacementEngine",
+    "get_policy",
+    "available_policies",
+    "POLICIES",
+]
+
+VERBS = ("deploy", "compact", "reconfigure")
+
+
+@dataclasses.dataclass
+class EngineResult:
+    """Outcome of one engine verb."""
+
+    policy: str
+    verb: str
+    pending: List[Workload]
+    seconds: float
+
+
+# ---------------------------------------------------------------------------
+# policy interface
+# ---------------------------------------------------------------------------
+class PlacementPolicy:
+    """One placement approach; verbs mutate a *single-device* state in place."""
+
+    name: str = "abstract"
+    supports: Tuple[str, ...] = VERBS
+
+    def __init__(self, time_limit: float = 30.0):
+        self.time_limit = time_limit
+
+    def deploy(
+        self, state: ClusterState, new_workloads: Sequence[Workload]
+    ) -> List[Workload]:
+        raise NotImplementedError
+
+    def compact(self, state: ClusterState) -> None:
+        raise NotImplementedError
+
+    def reconfigure(self, state: ClusterState) -> List[Workload]:
+        raise NotImplementedError
+
+
+# ---------------------------------------------------------------------------
+# baseline policies (first-fit / load-balanced)
+# ---------------------------------------------------------------------------
+def _spot_first_fit(
+    state: ClusterState, w: Workload, candidates: Sequence[str]
+) -> Optional[Tuple[str, int]]:
+    for gid in sorted(candidates):
+        idx = baselines._try_place(state.gpus[gid], w, numeric_order=True)
+        if idx is not None:
+            return gid, idx
+    return None
+
+
+def _spot_load_balanced(
+    state: ClusterState, w: Workload, candidates: Sequence[str]
+) -> Optional[Tuple[str, int]]:
+    ordered = sorted(
+        candidates, key=lambda gid: (state.gpus[gid].joint_slice_utilization(), gid)
+    )
+    for gid in ordered:
+        idx = baselines._try_place(state.gpus[gid], w, numeric_order=True)
+        if idx is not None:
+            return gid, idx
+    return None
+
+
+class _BaselinePolicy(PlacementPolicy):
+    """Shared compaction/reconfiguration replay for the two baselines."""
+
+    _spot: Callable = None  # (state, w, candidates) -> (gid, idx) | None
+    _deploy: Callable = None
+
+    def deploy(self, state, new_workloads):
+        return type(self)._deploy(state, new_workloads)
+
+    def compact(self, state):
+        """Vacate the least utilized GPU into other allocated GPUs, placing
+        per the baseline rule; one-shot migrations only (Sec 5.2.2)."""
+        spot = type(self)._spot
+        progress = True
+        while progress:
+            progress = False
+            used = sorted(
+                state.used_gpus(), key=lambda g: (g.joint_slice_utilization(), g.gid)
+            )
+            for gpu in used:
+                others = [g.gid for g in state.used_gpus() if g.gid != gpu.gid]
+                before = {o: state.gpus[o].clone() for o in others}
+                with state.transaction() as txn:
+                    moves: List[Tuple[str, str, int]] = []
+                    ok = True
+                    for pl in list(state.gpus[gpu.gid].placements):
+                        w = state.workloads[pl.wid]
+                        state.remove(pl.wid, gpu.gid)
+                        s = spot(state, w, others)
+                        if s is None:
+                            ok = False
+                            break
+                        state.place(w.wid, *s)
+                        moves.append((w.wid, *s))
+                    if ok:
+                        # one-shot property: destinations free pre-compaction
+                        for wid, dst, idx in moves:
+                            prof = state.gpus[dst].device.profile(
+                                state.workloads[wid].profile_id
+                            )
+                            if not before[dst].can_place_at(prof, idx):
+                                ok = False
+                                break
+                    if not ok:
+                        txn.rollback()
+                if ok:
+                    progress = True
+                    break
+
+    def reconfigure(self, state):
+        """Re-place ALL workloads from scratch with the baseline rule
+        (arrival order, indexes from 0 — paper Sec 5.2.3)."""
+        workloads = state.placed_workloads()
+        fresh = ClusterState(
+            gpus={gid: GPUState(gid, state.gpus[gid].device) for gid in state.gpus},
+            workloads={w.wid: w for w in workloads},
+        )
+        pending = type(self)._deploy(fresh, workloads)
+        for gid in state.gpus:
+            state.gpus[gid] = fresh.gpus[gid]
+        state.workloads.update(fresh.workloads)
+        return pending
+
+
+class FirstFitPolicy(_BaselinePolicy):
+    name = "first_fit"
+    _spot = staticmethod(_spot_first_fit)
+    _deploy = staticmethod(baselines.first_fit)
+
+
+class LoadBalancedPolicy(_BaselinePolicy):
+    name = "load_balanced"
+    _spot = staticmethod(_spot_load_balanced)
+    _deploy = staticmethod(baselines.load_balanced)
+
+
+# ---------------------------------------------------------------------------
+# rule-based heuristic (Sec 4.2)
+# ---------------------------------------------------------------------------
+class RuleBasedPolicy(PlacementPolicy):
+    name = "rule_based"
+
+    def deploy(self, state, new_workloads):
+        return heuristic.initial_deployment(state, new_workloads)
+
+    def compact(self, state):
+        heuristic.compaction(state)
+
+    def reconfigure(self, state):
+        return heuristic.reconfiguration(state)
+
+
+# ---------------------------------------------------------------------------
+# WPM MIP (Sec 4.1)
+# ---------------------------------------------------------------------------
+def _adopt(state: ClusterState, solved: ClusterState) -> None:
+    """Copy a solver-produced layout into ``state`` in place."""
+    for gid, gpu in solved.gpus.items():
+        state.gpus[gid] = gpu
+    state.workloads.update(solved.workloads)
+
+
+class MIPPolicy(PlacementPolicy):
+    """WPM with existing placements fixed on deploy (paper 'mip')."""
+
+    name = "mip"
+    _joint_deploy = False
+
+    def deploy(self, state, new_workloads):
+        from .wpm_mip import solve_wpm
+
+        res = solve_wpm(
+            state,
+            new_workloads,
+            movable=self._joint_deploy,
+            allow_reconfig=self._joint_deploy,
+            time_limit=self.time_limit,
+        )
+        _adopt(state, res.state)
+        return res.pending
+
+    def compact(self, state):
+        from .wpm_mip import solve_wpm
+
+        res = solve_wpm(
+            state, (), movable=True, allow_reconfig=True, time_limit=self.time_limit
+        )
+        _adopt(state, res.state)
+
+    def reconfigure(self, state):
+        from .wpm_mip import solve_wpm
+
+        res = solve_wpm(
+            state, (), movable=True, allow_reconfig=True, time_limit=self.time_limit
+        )
+        _adopt(state, res.state)
+        return res.pending
+
+
+class JointMIPPolicy(MIPPolicy):
+    """WPM jointly re-placing existing workloads on deploy (paper 'joint_mip')."""
+
+    name = "joint_mip"
+    _joint_deploy = True
+
+
+# ---------------------------------------------------------------------------
+# pattern-enumeration exact solver (beyond-paper)
+# ---------------------------------------------------------------------------
+class PatternsPolicy(PlacementPolicy):
+    """Exact for (#GPUs, wastage); re-places everything, so migration cost is
+    ignored — reconfiguration-style by construction."""
+
+    name = "patterns"
+    supports = ("deploy", "reconfigure")
+
+    def deploy(self, state, new_workloads):
+        from .patterns import reconfigure_patterns
+
+        for w in new_workloads:
+            state.add_workload(w)
+        try:
+            res = reconfigure_patterns(
+                state, extra_workloads=new_workloads, time_limit=self.time_limit
+            )
+        except RuntimeError:
+            # Not enough GPUs (or ILP infeasible) for the joint re-placement:
+            # reject the batch, keep the current layout untouched.
+            return list(new_workloads)
+        _adopt(state, res.state)
+        return []
+
+    def reconfigure(self, state):
+        from .patterns import reconfigure_patterns
+
+        res = reconfigure_patterns(state, time_limit=self.time_limit)
+        _adopt(state, res.state)
+        return []
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+POLICIES: Dict[str, Type[PlacementPolicy]] = {
+    p.name: p
+    for p in (
+        FirstFitPolicy,
+        LoadBalancedPolicy,
+        RuleBasedPolicy,
+        MIPPolicy,
+        JointMIPPolicy,
+        PatternsPolicy,
+    )
+}
+#: legacy aliases (serving layer historically called the heuristic this)
+_ALIASES = {"heuristic": "rule_based"}
+
+
+def available_policies() -> Tuple[str, ...]:
+    return tuple(POLICIES)
+
+
+def get_policy(name: str, time_limit: float = 30.0) -> PlacementPolicy:
+    key = _ALIASES.get(name, name)
+    if key not in POLICIES:
+        raise ValueError(f"unknown policy {name!r}; choose from {available_policies()}")
+    return POLICIES[key](time_limit=time_limit)
+
+
+# ---------------------------------------------------------------------------
+# the engine: verbs + heterogeneous-fleet routing
+# ---------------------------------------------------------------------------
+class PlacementEngine:
+    """Single entry point for all placement decisions.
+
+    ``deploy`` / ``compact`` / ``reconfigure`` mutate the passed state in
+    place.  On a homogeneous cluster the policy runs directly; on a mixed
+    fleet the engine runs it once per device group over a sub-view sharing
+    the real ``GPUState`` objects, so results land in the real state.
+    """
+
+    def __init__(self, policy: str = "rule_based", time_limit: float = 30.0):
+        self.policy = get_policy(policy, time_limit)
+
+    @property
+    def policy_name(self) -> str:
+        return self.policy.name
+
+    # -- device grouping ---------------------------------------------------
+    @staticmethod
+    def _groups(state: ClusterState) -> Dict[str, List[str]]:
+        groups: Dict[str, List[str]] = {}
+        for gid in state.ordered_gids():
+            groups.setdefault(state.gpus[gid].device.name, []).append(gid)
+        return groups
+
+    @staticmethod
+    def _subview(state: ClusterState, gids: Sequence[str]) -> ClusterState:
+        """A per-group view sharing GPUState objects and the workload dict."""
+        sub = ClusterState(
+            gpus={gid: state.gpus[gid] for gid in gids}, workloads=state.workloads
+        )
+        return sub
+
+    def _route(
+        self, state: ClusterState, workloads: Sequence[Workload]
+    ) -> Dict[str, List[Workload]]:
+        """Split workloads across device groups by ``device_kind``."""
+        groups = self._groups(state)
+        if len(groups) == 1:
+            kind = next(iter(groups))
+            for w in workloads:
+                if w.device_kind and w.device_kind != kind:
+                    raise ValueError(
+                        f"workload {w.wid} targets {w.device_kind!r}, fleet "
+                        f"is all {kind!r}"
+                    )
+            return {kind: list(workloads)}
+        routed: Dict[str, List[Workload]] = {k: [] for k in groups}
+        for w in workloads:
+            if not w.device_kind:
+                raise ValueError(
+                    f"workload {w.wid} has no device_kind on a mixed fleet "
+                    f"({tuple(groups)})"
+                )
+            if w.device_kind not in routed:
+                raise ValueError(
+                    f"workload {w.wid} targets {w.device_kind!r}, fleet has "
+                    f"{tuple(groups)}"
+                )
+            routed[w.device_kind].append(w)
+        return routed
+
+    def _per_group(self, state: ClusterState, fn) -> List[Workload]:
+        """Run ``fn(sub_state, group_gids)`` per device group, copy back."""
+        groups = self._groups(state)
+        pending: List[Workload] = []
+        for kind, gids in groups.items():
+            sub = self._subview(state, gids)
+            out = fn(sub, kind)
+            # Policies may have replaced GPUState objects (reconfigure/MIP)
+            # or even the sub dicts; mirror into the real state.
+            for gid in gids:
+                state.gpus[gid] = sub.gpus[gid]
+            if state.workloads is not sub.workloads:
+                state.workloads.update(sub.workloads)
+            if out:
+                pending.extend(out)
+        return pending
+
+    # -- verbs -------------------------------------------------------------
+    def deploy(
+        self, state: ClusterState, new_workloads: Sequence[Workload]
+    ) -> EngineResult:
+        self._check("deploy")
+        t0 = time.time()
+        routed = self._route(state, new_workloads)
+        multi = len(routed) > 1
+
+        def _deploy_group(sub, kind):
+            if multi and not routed[kind]:
+                return []  # don't wake solver policies for untouched groups
+            return self.policy.deploy(sub, routed[kind])
+
+        pending = self._per_group(state, _deploy_group)
+        return EngineResult(self.policy.name, "deploy", pending, time.time() - t0)
+
+    def compact(self, state: ClusterState) -> EngineResult:
+        self._check("compact")
+        t0 = time.time()
+        self._per_group(state, lambda sub, kind: self.policy.compact(sub))
+        return EngineResult(self.policy.name, "compact", [], time.time() - t0)
+
+    def reconfigure(self, state: ClusterState) -> EngineResult:
+        self._check("reconfigure")
+        t0 = time.time()
+        pending = self._per_group(
+            state, lambda sub, kind: self.policy.reconfigure(sub)
+        )
+        return EngineResult(self.policy.name, "reconfigure", pending, time.time() - t0)
+
+    def _check(self, verb: str) -> None:
+        if verb not in self.policy.supports:
+            raise ValueError(
+                f"policy {self.policy.name!r} does not support {verb!r} "
+                f"(supports {self.policy.supports})"
+            )

@@ -1,0 +1,309 @@
+"""Event-driven online placement simulation (beyond-paper).
+
+The paper's three use cases are snapshots of one *online* problem: replicas
+arrive, depart, and burst over time while the scheduler periodically
+compacts the fleet.  This module simulates that problem over timestamped
+traces and heterogeneous fleets (e.g. MIG A100s next to TPU pods), driving
+any ``PlacementEngine`` policy:
+
+  * ``Event``          — arrival (possibly a burst of several workloads),
+                         departure, or a compaction trigger
+  * ``generate_trace`` — seeded Poisson arrivals with exponential lifetimes
+                         and occasional bursts, routed across device kinds
+                         in proportion to fleet capacity
+  * ``OnlineSimulator``— replays a trace through an engine, enforcing an
+                         optional per-compaction migration budget (over
+                         budget -> the compaction is rolled back), and
+                         integrates time-averaged fleet metrics
+
+Time-averaged metrics follow the ROADMAP's scale axis: what matters online
+is not one snapshot's GPU count but the integral of GPUs-used (energy /
+cost) and wastage over the trace horizon.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .engine import PlacementEngine
+from .profiles import A100_80GB, DeviceModel
+from .state import ClusterState, GPUState, Workload
+
+__all__ = [
+    "Event",
+    "Trace",
+    "FleetSpec",
+    "build_fleet",
+    "generate_trace",
+    "TraceStats",
+    "OnlineSimulator",
+]
+
+#: (device model, count) pairs describing a possibly-mixed fleet.
+FleetSpec = Sequence[Tuple[DeviceModel, int]]
+
+#: default per-device profile pools for random arrivals (same spirit as
+#: simulator._DEFAULT_PROFILE_POOL: skip the trivially-whole-device profile).
+_ARRIVAL_POOLS: Dict[str, Tuple[int, ...]] = {
+    "A100-80GB": (5, 9, 14, 15, 19),
+    "H100-96GB": (5, 9, 14, 15, 19),
+    "TPUv5e-16x16-pod": (1, 2, 3, 4),
+}
+
+
+def _pool_for(device: DeviceModel) -> Tuple[int, ...]:
+    if device.name in _ARRIVAL_POOLS:
+        return _ARRIVAL_POOLS[device.name]
+    return tuple(
+        p.profile_id for p in device.profiles_sorted_desc()[1:]
+    ) or (device.profiles[0].profile_id,)
+
+
+@dataclasses.dataclass(frozen=True)
+class Event:
+    """One timestamped trace event."""
+
+    time: float
+    kind: str  # "arrival" | "departure" | "compact"
+    workloads: Tuple[Workload, ...] = ()  # arrivals; len > 1 == burst
+    wids: Tuple[str, ...] = ()  # departures
+
+
+@dataclasses.dataclass
+class Trace:
+    events: List[Event]
+    horizon: float
+
+    def __post_init__(self) -> None:
+        self.events.sort(key=lambda e: (e.time, e.kind))
+
+    @property
+    def n_arrivals(self) -> int:
+        return sum(len(e.workloads) for e in self.events if e.kind == "arrival")
+
+
+def build_fleet(spec: FleetSpec) -> ClusterState:
+    """A (possibly heterogeneous) cluster; gids are '<tag>-<i>'.
+
+    Indexes continue across spec entries sharing a tag, so e.g. two
+    ``(A100_80GB, n)`` entries yield distinct gids instead of colliding.
+    """
+    gpus: Dict[str, GPUState] = {}
+    next_i: Dict[str, int] = {}
+    for device, count in spec:
+        tag = device.name.split("-")[0].lower()
+        for _ in range(count):
+            i = next_i.get(tag, 0)
+            next_i[tag] = i + 1
+            gid = f"{tag}-{i}"
+            gpus[gid] = GPUState(gid, device)
+    return ClusterState(gpus=gpus)
+
+
+def generate_trace(
+    seed: int,
+    fleet: ClusterState,
+    horizon: float = 200.0,
+    arrival_rate: float = 1.0,
+    mean_lifetime: float = 40.0,
+    burst_prob: float = 0.1,
+    burst_size: Tuple[int, int] = (3, 6),
+) -> Trace:
+    """Seeded online trace over ``fleet``.
+
+    Arrivals are Poisson(``arrival_rate``); each arrival is a single
+    workload, or with ``burst_prob`` a burst of several (a model scaling out
+    under load).  Lifetimes are exponential with ``mean_lifetime``; deaths
+    past the horizon are dropped (the replica outlives the trace).  Each
+    workload targets a device kind with probability proportional to that
+    kind's share of fleet memory slices.
+    """
+    rng = np.random.default_rng(seed)
+    kinds: Dict[str, DeviceModel] = {}
+    weights: Dict[str, float] = {}
+    for gpu in fleet.gpus.values():
+        kinds[gpu.device.name] = gpu.device
+        weights[gpu.device.name] = (
+            weights.get(gpu.device.name, 0.0) + gpu.device.n_memory_slices
+        )
+    names = sorted(kinds)
+    probs = np.array([weights[n] for n in names], dtype=float)
+    probs /= probs.sum()
+
+    events: List[Event] = []
+    t = 0.0
+    wi = 0
+    while True:
+        t += float(rng.exponential(1.0 / arrival_rate))
+        if t >= horizon:
+            break
+        n = 1
+        if float(rng.random()) < burst_prob:
+            n = int(rng.integers(burst_size[0], burst_size[1] + 1))
+        ws: List[Workload] = []
+        for _ in range(n):
+            kind = names[int(rng.choice(len(names), p=probs))]
+            pool = _pool_for(kinds[kind])
+            pid = int(pool[int(rng.choice(len(pool)))])
+            w = Workload(wid=f"t{wi}", profile_id=pid, device_kind=kind)
+            wi += 1
+            ws.append(w)
+            death = t + float(rng.exponential(mean_lifetime))
+            if death < horizon:
+                events.append(Event(time=death, kind="departure", wids=(w.wid,)))
+        events.append(Event(time=t, kind="arrival", workloads=tuple(ws)))
+    return Trace(events=events, horizon=horizon)
+
+
+@dataclasses.dataclass
+class TraceStats:
+    """Time-averaged fleet metrics over one trace replay."""
+
+    policy: str
+    horizon: float
+    time_avg_gpus_used: float
+    time_avg_compute_waste: float
+    time_avg_memory_waste: float
+    time_avg_mem_occupancy: float  # used / total memory slices, whole fleet
+    peak_gpus_used: int
+    n_arrived: int = 0
+    n_placed: int = 0
+    n_rejected: int = 0
+    n_departed: int = 0
+    n_migrations: int = 0
+    n_compactions: int = 0
+    n_compactions_skipped: int = 0  # migration budget exceeded
+    engine_seconds: float = 0.0
+
+    def as_dict(self) -> Dict[str, float]:
+        return dataclasses.asdict(self)
+
+
+def _placement_map(state: ClusterState) -> Dict[str, Tuple[str, int]]:
+    return {
+        p.wid: (gid, p.index)
+        for gid, g in state.gpus.items()
+        for p in g.placements
+    }
+
+
+class OnlineSimulator:
+    """Replays a trace through a PlacementEngine over a live ClusterState."""
+
+    def __init__(
+        self,
+        state: ClusterState,
+        engine: PlacementEngine,
+        compact_every: Optional[float] = None,
+        migration_budget: Optional[int] = None,
+    ):
+        self.state = state
+        self.engine = engine
+        self.compact_every = compact_every
+        #: max migrations allowed per compaction; an over-budget compaction
+        #: is rolled back wholesale (the cluster keeps its layout).
+        self.migration_budget = migration_budget
+
+    # -- metric integration over time --------------------------------------
+    def _sample(self) -> Tuple[int, int, int, float]:
+        used = self.state.used_gpus()
+        cmp_waste = sum(g.compute_waste() for g in used)
+        mem_waste = sum(g.memory_waste() for g in used)
+        total_mem = sum(g.device.n_memory_slices for g in self.state.gpus.values())
+        used_mem = sum(g.used_memory_slices() for g in used)
+        return len(used), cmp_waste, mem_waste, used_mem / max(total_mem, 1)
+
+    def _events_with_compactions(self, trace: Trace):
+        if not self.compact_every:
+            yield from trace.events
+            return
+        next_c = self.compact_every
+        for ev in trace.events:
+            while next_c <= ev.time:
+                yield Event(time=next_c, kind="compact")
+                next_c += self.compact_every
+            yield ev
+        while next_c < trace.horizon:
+            yield Event(time=next_c, kind="compact")
+            next_c += self.compact_every
+
+    def run(self, trace: Trace) -> TraceStats:
+        st = self.state
+        stats = TraceStats(
+            policy=self.engine.policy_name,
+            horizon=trace.horizon,
+            time_avg_gpus_used=0.0,
+            time_avg_compute_waste=0.0,
+            time_avg_memory_waste=0.0,
+            time_avg_mem_occupancy=0.0,
+            peak_gpus_used=0,
+        )
+        acc = np.zeros(4)  # integrals of the _sample() tuple
+        t_prev = 0.0
+        for ev in self._events_with_compactions(trace):
+            sample = self._sample()
+            acc += np.array(sample) * (ev.time - t_prev)
+            stats.peak_gpus_used = max(stats.peak_gpus_used, sample[0])
+            t_prev = ev.time
+            if ev.kind == "arrival":
+                self._handle_arrival(ev, stats)
+            elif ev.kind == "departure":
+                self._handle_departure(ev, stats)
+            elif ev.kind == "compact":
+                self._handle_compact(stats)
+            else:  # pragma: no cover
+                raise ValueError(f"unknown event kind {ev.kind!r}")
+        sample = self._sample()
+        acc += np.array(sample) * (trace.horizon - t_prev)
+        stats.peak_gpus_used = max(stats.peak_gpus_used, sample[0])
+        h = max(trace.horizon, 1e-9)
+        (
+            stats.time_avg_gpus_used,
+            stats.time_avg_compute_waste,
+            stats.time_avg_memory_waste,
+            stats.time_avg_mem_occupancy,
+        ) = (acc / h).tolist()
+        return stats
+
+    def _handle_arrival(self, ev: Event, stats: TraceStats) -> None:
+        stats.n_arrived += len(ev.workloads)
+        res = self.engine.deploy(self.state, list(ev.workloads))
+        stats.engine_seconds += res.seconds
+        rejected = {w.wid for w in res.pending}
+        stats.n_rejected += len(rejected)
+        stats.n_placed += len(ev.workloads) - len(rejected)
+        # Rejected replicas leave the system (no admission queue — the online
+        # analogue of the paper's "pending" metric).
+        for wid in rejected:
+            self.state.workloads.pop(wid, None)
+
+    def _handle_departure(self, ev: Event, stats: TraceStats) -> None:
+        for wid in ev.wids:
+            gid = self.state.gpu_of(wid)
+            if gid is not None:
+                self.state.gpus[gid].remove(wid)
+                stats.n_departed += 1
+            self.state.workloads.pop(wid, None)
+
+    def _handle_compact(self, stats: TraceStats) -> None:
+        if "compact" not in self.engine.policy.supports:
+            return
+        before = _placement_map(self.state)
+        # Policies may replace GPUState objects wholesale (MIP adoption),
+        # which the op journal cannot undo — snapshot for budget rollback.
+        snapshot = self.state.clone() if self.migration_budget is not None else None
+        res = self.engine.compact(self.state)
+        stats.engine_seconds += res.seconds
+        after = _placement_map(self.state)
+        moved = sum(
+            1 for wid, spot in after.items() if before.get(wid) != spot
+        )
+        if self.migration_budget is not None and moved > self.migration_budget:
+            self.state.gpus = snapshot.gpus
+            self.state.workloads = snapshot.workloads
+            stats.n_compactions_skipped += 1
+            return
+        stats.n_compactions += 1
+        stats.n_migrations += moved

@@ -17,7 +17,7 @@ pending (unplaceable) workloads.
 from __future__ import annotations
 
 import math
-from typing import List, Optional, Sequence, Tuple
+from typing import List, Sequence, Tuple
 
 from .baselines import place_max_utilization
 from .state import ClusterState, GPUState, Workload
@@ -52,43 +52,40 @@ def initial_deployment(
 # ---------------------------------------------------------------------------
 # Compaction (Sec 4.2)
 # ---------------------------------------------------------------------------
-def _try_vacate(
-    state: ClusterState, gid: str, targets: Sequence[str]
-) -> Optional[List[Tuple[str, str, int]]]:
-    """Plan (wid, dst_gid, index) moves emptying ``gid`` into ``targets``.
+def _vacate(state: ClusterState, gid: str, targets: Sequence[str]) -> bool:
+    """Try to empty ``gid`` into ``targets`` with one-shot migrations only.
 
-    Pure one-shot migrations only: every destination span must be free in the
-    *current* state.  Returns None if not fully vacatable.
+    Runs inside a transaction on the real state: the moves are committed on
+    success and rolled back (O(#ops), no clone) on failure.  "One-shot" means
+    every destination span must already be free *before this vacate started*
+    (no dependency on other moves off-GPU).
     """
-    trial = state.clone()
-    moves: List[Tuple[str, str, int]] = []
-    victims = sorted(
-        trial.gpus[gid].placements,
-        key=lambda p: trial.gpus[gid].device.profile(p.profile_id).sort_key,
-    )
-    for pl in victims:
-        w = trial.workloads[pl.wid]
-        trial.gpus[gid].remove(pl.wid)
-        spot = place_max_utilization(
-            trial, w, candidates=[t for t in targets if t != gid], allow_new_gpu=False
+    targets = [t for t in targets if t != gid]
+    # Pre-move snapshots of the destinations, for the one-shot verification.
+    before = {t: state.gpus[t].clone() for t in targets}
+    with state.transaction() as txn:
+        moves: List[Tuple[str, str, int]] = []
+        victims = sorted(
+            state.gpus[gid].placements,
+            key=lambda p: state.gpus[gid].device.profile(p.profile_id).sort_key,
         )
-        if spot is None:
-            return None
-        trial.place(w.wid, *spot)
-        moves.append((w.wid, spot[0], spot[1]))
-    # Verify one-shot property against the *original* state: destination
-    # spans must already be free (no dependency on other moves off-GPU).
-    for wid, dst, idx in moves:
-        prof = state.gpus[dst].device.profile(state.workloads[wid].profile_id)
-        if dst != gid and not state.gpus[dst].can_place_at(prof, idx):
-            return None
-    return moves
-
-
-def _apply_moves(state: ClusterState, gid: str, moves: List[Tuple[str, str, int]]):
-    for wid, dst, idx in moves:
-        state.gpus[gid].remove(wid)
-        state.place(wid, dst, idx)
+        for pl in list(victims):
+            w = state.workloads[pl.wid]
+            state.remove(pl.wid, gid)
+            spot = place_max_utilization(
+                state, w, candidates=targets, allow_new_gpu=False
+            )
+            if spot is None:
+                txn.rollback()
+                return False
+            state.place(w.wid, *spot)
+            moves.append((w.wid, spot[0], spot[1]))
+        for wid, dst, idx in moves:
+            prof = state.gpus[dst].device.profile(state.workloads[wid].profile_id)
+            if not before[dst].can_place_at(prof, idx):
+                txn.rollback()
+                return False
+    return True
 
 
 def compaction(state: ClusterState) -> List[Workload]:
@@ -114,9 +111,7 @@ def compaction(state: ClusterState) -> List[Workload]:
             )
             if have < need:
                 continue
-            moves = _try_vacate(state, gpu.gid, others)
-            if moves is not None:
-                _apply_moves(state, gpu.gid, moves)
+            if _vacate(state, gpu.gid, others):
                 progress = True
                 break
         if progress:
@@ -127,23 +122,21 @@ def compaction(state: ClusterState) -> List[Workload]:
         if not free:
             continue
         borrowed = free[0].gid
-        trial = state.clone()
-        vacated = 0
-        used = sorted(
-            trial.used_gpus(), key=lambda g: (g.joint_slice_utilization(), g.gid)
-        )
-        for gpu in used:
-            targets = [
-                g.gid for g in trial.used_gpus() if g.gid != gpu.gid
-            ] + [borrowed]
-            moves = _try_vacate(trial, gpu.gid, targets)
-            if moves is not None:
-                _apply_moves(trial, gpu.gid, moves)
-                vacated += 1
-        if vacated > 1:
-            state.gpus = trial.gpus
-            state.workloads = trial.workloads
-            progress = True
+        with state.transaction() as outer:
+            vacated = 0
+            used = sorted(
+                state.used_gpus(), key=lambda g: (g.joint_slice_utilization(), g.gid)
+            )
+            for gpu in used:
+                targets = [
+                    g.gid for g in state.used_gpus() if g.gid != gpu.gid
+                ] + [borrowed]
+                if _vacate(state, gpu.gid, targets):
+                    vacated += 1
+            if vacated > 1:
+                progress = True
+            else:
+                outer.rollback()
     return []
 
 

@@ -27,6 +27,7 @@ pod-partition adaptation (``tpu_profiles.py``).
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Dict, Sequence, Tuple
 
 __all__ = [
@@ -100,8 +101,10 @@ class DeviceModel:
     def total_memory_gb(self) -> int:  # M_g
         return self.n_memory_slices * self.mem_per_slice_gb
 
-    @property
+    @functools.cached_property
     def by_id(self) -> Dict[int, Profile]:
+        # cached_property writes through the instance __dict__, which frozen
+        # dataclasses permit; profile() sits on every placement hot path.
         return {p.profile_id: p for p in self.profiles}
 
     def profile(self, profile_id: int) -> Profile:

@@ -5,16 +5,37 @@ partition profile.  A *configuration* (paper terminology) is the set of
 partitions + workload assignments on a GPU; here a ``GPUState`` holds the
 placements directly (partition == placement, since under DRA a partition is
 created per workload placement).
+
+Performance model
+-----------------
+``GPUState`` keeps an incrementally-maintained occupancy cache (memory
+position -> wid, plus used-slice / media-extension counters) so feasibility
+checks are O(profile span) instead of O(placements x span) rebuilds.  The
+cache survives direct mutation of ``placements`` (some callers backtrack by
+editing the list) by keying it on a tuple snapshot of the list.
+
+``ClusterState.transaction()`` provides an O(1)-per-op apply/undo journal so
+trial placements (compaction vacate search, baseline replays, online
+what-ifs) no longer need ``clone()`` of the whole cluster: mutate in place,
+then ``rollback()`` to restore byte-identical state, or commit by falling
+off the end of the ``with`` block.  Inside a transaction, use the
+*cluster-level* ``place`` / ``remove`` / ``add_workload`` mutators — direct
+``GPUState`` mutation is legal but bypasses the journal.
 """
 from __future__ import annotations
 
-import copy
 import dataclasses
 from typing import Dict, Iterable, List, Optional, Tuple
 
 from .profiles import A100_80GB, DeviceModel, Profile
 
-__all__ = ["Workload", "Placement", "GPUState", "ClusterState"]
+__all__ = [
+    "Workload",
+    "Placement",
+    "GPUState",
+    "ClusterState",
+    "Transaction",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -28,6 +49,10 @@ class Workload:
     #: per-workload placement reward p_w and migration penalty gamma^M_w.
     reward: float = 100.0
     migration_cost: float = 1.0
+    #: device-model name this workload's profile_id refers to; blank means
+    #: "whatever the (homogeneous) cluster runs".  Heterogeneous fleets set
+    #: it so the placement engine can route to compatible GPUs only.
+    device_kind: str = ""
 
     def profile(self, device: DeviceModel = A100_80GB) -> Profile:
         return device.profile(self.profile_id)
@@ -53,42 +78,64 @@ class GPUState:
     device: DeviceModel = A100_80GB
     placements: List[Placement] = dataclasses.field(default_factory=list)
 
-    # ---- occupancy -------------------------------------------------------
-    def memory_occupancy(self) -> List[Optional[str]]:
-        """memory position -> wid or None."""
+    def __post_init__(self) -> None:
+        self._occ: List[Optional[str]] = []
+        self._snap: Optional[Tuple[Placement, ...]] = None  # cache key
+        self._used_cmp = 0
+        self._used_mem = 0
+        self._me_used = 0
+
+    # ---- occupancy cache -------------------------------------------------
+    def _rebuild_cache(self, snap: Tuple[Placement, ...]) -> None:
         occ: List[Optional[str]] = [None] * self.device.n_memory_slices
-        for pl in self.placements:
-            mem, _ = pl.spans(self.device)
-            for pos in mem:
+        cmp_ = mem_ = me_ = 0
+        for pl in snap:
+            prof = self.device.profile(pl.profile_id)
+            span, _ = prof.span(pl.index, self.device.n_gpu_slices)
+            for pos in span:
                 if occ[pos] is not None:
                     raise ValueError(
                         f"{self.gid}: overlapping placements at memory pos {pos}"
                     )
                 occ[pos] = pl.wid
-        return occ
+            cmp_ += prof.compute_slices
+            mem_ += prof.memory_slices
+            me_ += prof.media_extensions
+        self._occ = occ
+        self._used_cmp, self._used_mem, self._me_used = cmp_, mem_, me_
+        self._snap = snap
+
+    def _occupancy(self) -> List[Optional[str]]:
+        """The cached occupancy array (do not mutate)."""
+        snap = tuple(self.placements)
+        if snap != self._snap:
+            self._rebuild_cache(snap)
+        return self._occ
+
+    # ---- occupancy -------------------------------------------------------
+    def memory_occupancy(self) -> List[Optional[str]]:
+        """memory position -> wid or None."""
+        return list(self._occupancy())
 
     def gpu_slice_occupancy(self) -> List[Optional[str]]:
         """GPU slice -> wid or None (positions 0..n_gpu_slices-1)."""
-        return self.memory_occupancy()[: self.device.n_gpu_slices]
+        return list(self._occupancy()[: self.device.n_gpu_slices])
 
     def free_gpu_slices(self) -> List[int]:
-        return [i for i, w in enumerate(self.gpu_slice_occupancy()) if w is None]
+        occ = self._occupancy()
+        return [i for i in range(self.device.n_gpu_slices) if occ[i] is None]
 
     def used_compute_slices(self) -> int:
-        return sum(
-            self.device.profile(p.profile_id).compute_slices for p in self.placements
-        )
+        self._occupancy()
+        return self._used_cmp
 
     def used_memory_slices(self) -> int:
-        return sum(
-            self.device.profile(p.profile_id).memory_slices for p in self.placements
-        )
+        self._occupancy()
+        return self._used_mem
 
     def media_extensions_used(self) -> int:
-        return sum(
-            self.device.profile(p.profile_id).media_extensions
-            for p in self.placements
-        )
+        self._occupancy()
+        return self._me_used
 
     def is_empty(self) -> bool:
         return not self.placements
@@ -98,15 +145,15 @@ class GPUState:
         """Is placing ``profile`` at ``index`` feasible in the current state?"""
         if index not in profile.allowed_indexes:
             return False
-        mem, _ = profile.span(index, self.device.n_gpu_slices)
-        if mem.stop > self.device.n_memory_slices:
+        stop = index + profile.memory_slices
+        if stop > self.device.n_memory_slices:
             return False
-        occ = self.memory_occupancy()
-        if any(occ[pos] is not None for pos in mem):
+        occ = self._occupancy()
+        if any(occ[pos] is not None for pos in range(index, stop)):
             return False
         if (
             profile.media_extensions
-            and self.media_extensions_used() + profile.media_extensions
+            and self._me_used + profile.media_extensions
             > self.device.max_media_extensions
         ):
             return False
@@ -127,13 +174,52 @@ class GPUState:
             raise ValueError(f"{self.gid}: cannot place {profile.name} at {index}")
         pl = Placement(wid, profile_id, index)
         self.placements.append(pl)
+        # can_place_at validated the cache; extend it incrementally.
+        for pos in range(index, index + profile.memory_slices):
+            self._occ[pos] = wid
+        self._used_cmp += profile.compute_slices
+        self._used_mem += profile.memory_slices
+        self._me_used += profile.media_extensions
+        self._snap = self._snap + (pl,)
         return pl
 
     def remove(self, wid: str) -> Placement:
         for i, pl in enumerate(self.placements):
             if pl.wid == wid:
-                return self.placements.pop(i)
+                self._occupancy()  # ensure cache is valid pre-mutation
+                self.placements.pop(i)
+                self._shrink_cache(pl)
+                return pl
         raise KeyError(f"{self.gid}: workload {wid} not placed here")
+
+    def _shrink_cache(self, pl: Placement) -> None:
+        prof = self.device.profile(pl.profile_id)
+        for pos in range(pl.index, pl.index + prof.memory_slices):
+            self._occ[pos] = None
+        self._used_cmp -= prof.compute_slices
+        self._used_mem -= prof.memory_slices
+        self._me_used -= prof.media_extensions
+        self._snap = tuple(self.placements)
+
+    # ---- journal undo primitives (Transaction only) ----------------------
+    def _undo_place(self, pl: Placement) -> None:
+        """Reverse a journaled place(); the placement is still last."""
+        self._occupancy()
+        last = self.placements.pop()
+        assert last == pl, f"{self.gid}: journal out of sync ({last} != {pl})"
+        self._shrink_cache(pl)
+
+    def _undo_remove(self, pl: Placement, at: int) -> None:
+        """Reverse a journaled remove(), restoring list order exactly."""
+        self._occupancy()
+        self.placements.insert(at, pl)
+        prof = self.device.profile(pl.profile_id)
+        for pos in range(pl.index, pl.index + prof.memory_slices):
+            self._occ[pos] = pl.wid
+        self._used_cmp += prof.compute_slices
+        self._used_mem += prof.memory_slices
+        self._me_used += prof.media_extensions
+        self._snap = tuple(self.placements)
 
     # ---- wastage (index-level; Table 3 semantics) -------------------------
     def compute_waste(self) -> int:
@@ -149,7 +235,7 @@ class GPUState:
         """Stranded extra memory position (m7 unusable; paper 3.2.3)."""
         if not self.device.extra_memory:
             return 0
-        occ = self.memory_occupancy()
+        occ = self._occupancy()
         last_gpu_slice = self.device.n_gpu_slices - 1  # slice 6
         extra_pos = self.device.n_memory_slices - 1  # m7
         holder = occ[last_gpu_slice]
@@ -161,11 +247,86 @@ class GPUState:
 
     def joint_slice_utilization(self) -> float:
         """(s_m + s_c) / (S_m + S_c) — heuristic GPU sort key (Sec 4.2)."""
-        s_m, s_c = self.used_memory_slices(), self.used_compute_slices()
-        return (s_m + s_c) / (self.device.n_memory_slices + self.device.n_gpu_slices)
+        self._occupancy()
+        return (self._used_mem + self._used_cmp) / (
+            self.device.n_memory_slices + self.device.n_gpu_slices
+        )
 
     def clone(self) -> "GPUState":
         return GPUState(self.gid, self.device, list(self.placements))
+
+
+# ---------------------------------------------------------------------------
+# transactions
+# ---------------------------------------------------------------------------
+class Transaction:
+    """Undo journal over a ClusterState (O(1) record per mutation).
+
+    Obtained from ``ClusterState.transaction()``.  Mutations made through the
+    cluster-level mutators while the transaction is the innermost open one
+    are journaled.  ``rollback()`` restores the exact pre-transaction state
+    (placement list order included); falling off the ``with`` block commits
+    (an inner transaction's ops are spliced into its parent so an outer
+    rollback still undoes them).  An exception rolls back automatically.
+    """
+
+    def __init__(self, state: "ClusterState", parent: Optional["Transaction"]):
+        self._state = state
+        self._parent = parent
+        self._ops: List[Tuple] = []
+        self.closed = False
+
+    # -- recording (ClusterState only) --
+    def _record(self, op: Tuple) -> None:
+        if not self.closed:
+            self._ops.append(op)
+
+    # -- lifecycle --
+    def rollback(self) -> None:
+        """Undo every journaled op, newest first; the txn becomes inert."""
+        if self.closed:
+            return
+        st = self._state
+        for op in reversed(self._ops):
+            kind = op[0]
+            if kind == "place":
+                _, gid, pl = op
+                st.gpus[gid]._undo_place(pl)
+            elif kind == "remove":
+                _, gid, pl, at = op
+                st.gpus[gid]._undo_remove(pl, at)
+            elif kind == "add_wl":
+                _, wid, prev = op
+                if prev is None:
+                    st.workloads.pop(wid, None)
+                else:
+                    st.workloads[wid] = prev
+            else:  # pragma: no cover - journal is internal
+                raise AssertionError(f"unknown journal op {kind}")
+        self._ops.clear()
+        self.closed = True
+
+    def commit(self) -> None:
+        """Keep the mutations; splice ops into the parent txn if any."""
+        if self.closed:
+            return
+        if self._parent is not None:
+            self._parent._ops.extend(self._ops)
+        self._ops.clear()
+        self.closed = True
+
+    # -- context manager --
+    def __enter__(self) -> "Transaction":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> bool:
+        if exc_type is not None:
+            self.rollback()
+        else:
+            self.commit()
+        assert self._state._txns and self._state._txns[-1] is self
+        self._state._txns.pop()
+        return False
 
 
 @dataclasses.dataclass
@@ -174,6 +335,9 @@ class ClusterState:
 
     gpus: Dict[str, GPUState] = dataclasses.field(default_factory=dict)
     workloads: Dict[str, Workload] = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self) -> None:
+        self._txns: List[Transaction] = []
 
     @classmethod
     def homogeneous(
@@ -216,12 +380,45 @@ class ClusterState:
     def ordered_gids(self) -> List[str]:
         return sorted(self.gpus.keys())
 
+    # ---- transactional mutators -------------------------------------------
+    def transaction(self) -> Transaction:
+        """Open a (nestable) undo journal; use as ``with state.transaction() as txn``."""
+        txn = Transaction(self, self._txns[-1] if self._txns else None)
+        self._txns.append(txn)
+        return txn
+
+    def _journal(self, op: Tuple) -> None:
+        # Nearest OPEN transaction: after an inner rollback() (closed but not
+        # yet exited), subsequent ops must still journal to the ancestor so an
+        # outer rollback stays byte-identical.
+        for txn in reversed(self._txns):
+            if not txn.closed:
+                txn._record(op)
+                return
+
     def add_workload(self, w: Workload) -> None:
+        self._journal(("add_wl", w.wid, self.workloads.get(w.wid)))
         self.workloads[w.wid] = w
 
     def place(self, wid: str, gid: str, index: int) -> Placement:
         w = self.workloads[wid]
-        return self.gpus[gid].place(wid, w.profile_id, index)
+        pl = self.gpus[gid].place(wid, w.profile_id, index)
+        self._journal(("place", gid, pl))
+        return pl
+
+    def remove(self, wid: str, gid: Optional[str] = None) -> Placement:
+        """Journaled unplacement (the workload stays registered)."""
+        if gid is None:
+            gid = self.gpu_of(wid)
+            if gid is None:
+                raise KeyError(f"workload {wid} is not placed")
+        gpu = self.gpus[gid]
+        at = next((i for i, p in enumerate(gpu.placements) if p.wid == wid), None)
+        if at is None:
+            raise KeyError(f"{gid}: workload {wid} not placed here")
+        pl = gpu.remove(wid)
+        self._journal(("remove", gid, pl, at))
+        return pl
 
     def clone(self) -> "ClusterState":
         return ClusterState(
@@ -232,7 +429,7 @@ class ClusterState:
     def validate(self) -> None:
         """Raise if any GPU has overlapping/illegal placements."""
         for gpu in self.gpus.values():
-            gpu.memory_occupancy()
+            gpu._occupancy()
             for p in gpu.placements:
                 prof = gpu.device.profile(p.profile_id)
                 if p.index not in prof.allowed_indexes:

@@ -10,9 +10,11 @@ ClusterServer then drives the three paper use cases over the live cluster:
   * ``compact``     -> compaction (Sec 2.3.2), periodic
   * ``reconfigure`` -> reconfiguration (Sec 2.3.3), maintenance windows
 
-Placement policy is pluggable: the Sec-4.2 heuristic (default), the WPM MIP,
-or the first-fit / load-balanced baselines — the same four approaches the
-paper benchmarks, now acting on replicas instead of synthetic workloads.
+Placement policy is pluggable through ``core.engine.PlacementEngine``: the
+Sec-4.2 heuristic (default), the WPM MIP, or the first-fit / load-balanced
+baselines — the same approaches the paper benchmarks, now acting on replicas
+instead of synthetic workloads.  This layer holds NO policy dispatch of its
+own; it only translates replicas <-> workloads and calls engine verbs.
 """
 from __future__ import annotations
 
@@ -24,13 +26,12 @@ import jax
 import jax.numpy as jnp
 
 from ..configs import get_config
-from ..core import baselines, heuristic
+from ..core.engine import PlacementEngine
 from ..core.metrics import PlacementMetrics, evaluate
 from ..core.migration import MigrationPlan, plan_migration
 from ..core.profiles import DeviceModel, Profile
 from ..core.state import ClusterState, Workload
 from ..core.tpu_profiles import TPU_V5E_POD, profile_for_chips
-from ..core.wpm_mip import solve_wpm
 from ..models import bundle
 
 __all__ = [
@@ -40,8 +41,6 @@ __all__ = [
     "DeployReport",
     "PlacementReport",
 ]
-
-_POLICIES = ("heuristic", "mip", "first_fit", "load_balanced")
 
 
 # ---------------------------------------------------------------------------
@@ -113,9 +112,9 @@ class ClusterServer:
         policy: str = "heuristic",
         mip_time_limit: float = 30.0,
     ):
-        assert policy in _POLICIES, f"policy must be one of {_POLICIES}"
         self.device = device
-        self.policy = policy
+        self.engine = PlacementEngine(policy, time_limit=mip_time_limit)
+        self.policy = self.engine.policy_name
         self.mip_time_limit = mip_time_limit
         self.state = ClusterState.homogeneous(n_nodes, device, prefix="node")
         #: wid -> (model name, arch id)
@@ -159,18 +158,7 @@ class ClusterServer:
         )
 
     def _place_new(self, news: List[Workload]) -> List[Workload]:
-        if self.policy == "heuristic":
-            return heuristic.initial_deployment(self.state, news)
-        if self.policy == "first_fit":
-            return baselines.first_fit(self.state, news)
-        if self.policy == "load_balanced":
-            return baselines.load_balanced(self.state, news)
-        res = solve_wpm(
-            self.state, news, movable=False, allow_reconfig=False,
-            time_limit=self.mip_time_limit,
-        )
-        self.state = res.state
-        return res.pending
+        return self.engine.deploy(self.state, news).pending
 
     # ---------------------------------------------------------------- retire
     def retire(self, model: str, n: int = 1) -> List[str]:
@@ -187,17 +175,15 @@ class ClusterServer:
 
     # ----------------------------------------------------------- compaction
     def compact(self) -> PlacementReport:
-        """Vacate underutilized nodes (paper Sec 2.3.2); run periodically."""
+        """Vacate underutilized nodes (paper Sec 2.3.2); run periodically.
+
+        Note: each policy now compacts with its OWN rule (the engine verb);
+        the pre-engine code silently fell back to the Sec-4.2 heuristic for
+        non-MIP policies, so baseline policies may pack less tightly here.
+        """
         before_state = self.state.clone()
         before = evaluate(before_state)
-        if self.policy == "mip":
-            res = solve_wpm(
-                self.state, (), movable=True, allow_reconfig=True,
-                time_limit=self.mip_time_limit,
-            )
-            self.state = res.state
-        else:
-            heuristic.compaction(self.state)
+        self.engine.compact(self.state)
         plan = plan_migration(before_state, self.state)
         return PlacementReport(before=before, after=evaluate(self.state, before_state), plan=plan)
 
@@ -206,14 +192,7 @@ class ClusterServer:
         """Optimal re-placement of everything (paper Sec 2.3.3); maintenance."""
         before_state = self.state.clone()
         before = evaluate(before_state)
-        if self.policy == "mip":
-            res = solve_wpm(
-                self.state, (), movable=True, allow_reconfig=True,
-                time_limit=self.mip_time_limit,
-            )
-            self.state = res.state
-        else:
-            heuristic.reconfiguration(self.state)
+        self.engine.reconfigure(self.state)
         plan = plan_migration(before_state, self.state)
         return PlacementReport(before=before, after=evaluate(self.state, before_state), plan=plan)
 

@@ -1,6 +1,10 @@
 """Hypothesis property tests for placement-system invariants."""
-import hypothesis.strategies as st
-from hypothesis import HealthCheck, given, settings
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+
+import hypothesis.strategies as st  # noqa: E402
+from hypothesis import HealthCheck, given, settings  # noqa: E402
 
 from repro.core import baselines, heuristic, metrics
 from repro.core.indexing import assign_indexes
@@ -8,14 +12,16 @@ from repro.core.profiles import A100_80GB
 from repro.core.state import ClusterState, GPUState, Workload
 
 _POOL = [5, 9, 14, 15, 19]
+# Case sizes kept small so tier-1 stays fast; the transactional-state parity
+# tests in test_engine.py cover the larger seeded instances.
 _SETTINGS = dict(
-    max_examples=40,
+    max_examples=25,
     deadline=None,
     suppress_health_check=[HealthCheck.too_slow],
 )
 
 workload_lists = st.lists(
-    st.sampled_from(_POOL), min_size=1, max_size=20
+    st.sampled_from(_POOL), min_size=1, max_size=16
 ).map(lambda pids: [Workload(f"w{i}", p) for i, p in enumerate(pids)])
 
 

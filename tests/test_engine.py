@@ -1,0 +1,311 @@
+"""PlacementEngine parity with the old call paths + transaction invariants.
+
+The refactor promise: every policy produces *identical* placements through
+``PlacementEngine`` as through the pre-engine call paths (direct module
+functions), and the transactional state's apply/undo journal restores
+byte-identical state, so clone-based trial search could be replaced without
+behavior change.
+"""
+import pytest
+
+from repro.core import baselines, heuristic
+from repro.core.engine import PlacementEngine, available_policies, get_policy
+from repro.core.simulator import generate_test_case
+from repro.core.state import ClusterState, GPUState, Workload
+
+SEEDS = (0, 3, 7, 11)
+
+
+def _placements(state: ClusterState):
+    return {
+        (gid, p.wid, p.profile_id, p.index)
+        for gid, g in state.gpus.items()
+        for p in g.placements
+    }
+
+
+def _snapshot(state: ClusterState):
+    """Byte-identical view: list order matters, plus occupancy + workloads."""
+    return (
+        {gid: list(g.placements) for gid, g in state.gpus.items()},
+        {gid: g.memory_occupancy() for gid, g in state.gpus.items()},
+        dict(state.workloads),
+    )
+
+
+# ---------------------------------------------------------------------------
+# engine <-> old call path parity
+# ---------------------------------------------------------------------------
+class TestDeployParity:
+    @pytest.mark.parametrize("seed", SEEDS)
+    @pytest.mark.parametrize(
+        "policy,old",
+        [
+            ("first_fit", baselines.first_fit),
+            ("load_balanced", baselines.load_balanced),
+            ("rule_based", heuristic.initial_deployment),
+        ],
+    )
+    def test_in_place_policies(self, policy, old, seed):
+        tc = generate_test_case(seed, n_gpus=8)
+        a = tc.initial.clone()
+        pending_a = old(a, tc.new_workloads)
+        b = tc.initial.clone()
+        res = PlacementEngine(policy).deploy(b, tc.new_workloads)
+        assert _placements(a) == _placements(b)
+        assert [w.wid for w in pending_a] == [w.wid for w in res.pending]
+
+    @pytest.mark.parametrize("seed", (0, 3))
+    def test_mip(self, seed):
+        from repro.core.wpm_mip import solve_wpm
+
+        tc = generate_test_case(seed, n_gpus=8)
+        ref = solve_wpm(
+            tc.initial.clone(), tc.new_workloads, movable=False,
+            allow_reconfig=False,
+        )
+        st = tc.initial.clone()
+        res = PlacementEngine("mip").deploy(st, tc.new_workloads)
+        assert _placements(ref.state) == _placements(st)
+        assert {w.wid for w in ref.pending} == {w.wid for w in res.pending}
+
+
+class TestCompactionParity:
+    @pytest.mark.parametrize("seed", SEEDS)
+    def test_rule_based(self, seed):
+        tc = generate_test_case(seed, n_gpus=8)
+        a = tc.initial.clone()
+        heuristic.compaction(a)
+        b = tc.initial.clone()
+        PlacementEngine("rule_based").compact(b)
+        assert _placements(a) == _placements(b)
+
+    @pytest.mark.parametrize("seed", SEEDS)
+    @pytest.mark.parametrize("policy", ["first_fit", "load_balanced"])
+    def test_baselines_match_clone_reference(self, policy, seed):
+        """The txn-based baseline compaction == the seed's clone-based replay."""
+        from repro.core.engine import _spot_first_fit, _spot_load_balanced
+
+        spot = _spot_first_fit if policy == "first_fit" else _spot_load_balanced
+
+        def reference(state):  # the seed implementation, clones and all
+            progress = True
+            while progress:
+                progress = False
+                used = sorted(
+                    state.used_gpus(),
+                    key=lambda g: (g.joint_slice_utilization(), g.gid),
+                )
+                for gpu in used:
+                    others = [g.gid for g in state.used_gpus() if g.gid != gpu.gid]
+                    trial = state.clone()
+                    moves, ok = [], True
+                    for pl in list(trial.gpus[gpu.gid].placements):
+                        w = trial.workloads[pl.wid]
+                        trial.gpus[gpu.gid].remove(pl.wid)
+                        s = spot(trial, w, others)
+                        if s is None:
+                            ok = False
+                            break
+                        trial.place(w.wid, *s)
+                        moves.append((w.wid, *s))
+                    if ok:
+                        for wid, dst, idx in moves:
+                            prof = state.gpus[dst].device.profile(
+                                state.workloads[wid].profile_id
+                            )
+                            if not state.gpus[dst].can_place_at(prof, idx):
+                                ok = False
+                                break
+                    if ok:
+                        for wid, dst, idx in moves:
+                            state.gpus[gpu.gid].remove(wid)
+                            state.place(wid, dst, idx)
+                        progress = True
+                        break
+
+        tc = generate_test_case(seed, n_gpus=8)
+        a = tc.initial.clone()
+        reference(a)
+        b = tc.initial.clone()
+        PlacementEngine(policy).compact(b)
+        assert _placements(a) == _placements(b)
+
+
+class TestReconfigurationParity:
+    @pytest.mark.parametrize("seed", (0, 5))
+    def test_rule_based(self, seed):
+        tc = generate_test_case(seed, n_gpus=8)
+        a = tc.initial.clone()
+        heuristic.reconfiguration(a)
+        b = tc.initial.clone()
+        PlacementEngine("rule_based").reconfigure(b)
+        assert _placements(a) == _placements(b)
+
+    def test_patterns(self):
+        from repro.core.patterns import reconfigure_patterns
+
+        tc = generate_test_case(1, n_gpus=8)
+        ref = reconfigure_patterns(tc.initial.clone())
+        st = tc.initial.clone()
+        PlacementEngine("patterns").reconfigure(st)
+        assert _placements(ref.state) == _placements(st)
+
+
+class TestEngineSurface:
+    def test_registry(self):
+        assert set(available_policies()) == {
+            "first_fit", "load_balanced", "rule_based", "mip", "joint_mip",
+            "patterns",
+        }
+        assert get_policy("heuristic").name == "rule_based"  # legacy alias
+        with pytest.raises(ValueError):
+            get_policy("nope")
+
+    def test_unsupported_verb(self):
+        st = ClusterState.homogeneous(2)
+        with pytest.raises(ValueError, match="does not support"):
+            PlacementEngine("patterns").compact(st)
+
+    def test_mixed_fleet_requires_device_kind(self):
+        from repro.core.profiles import A100_80GB
+        from repro.core.tpu_profiles import TPU_V5E_POD
+
+        st = ClusterState(
+            gpus={
+                "a0": GPUState("a0", A100_80GB),
+                "t0": GPUState("t0", TPU_V5E_POD),
+            }
+        )
+        with pytest.raises(ValueError, match="device_kind"):
+            PlacementEngine("first_fit").deploy(st, [Workload("w", 19)])
+
+    def test_mixed_fleet_routes_by_kind(self):
+        from repro.core.profiles import A100_80GB
+        from repro.core.tpu_profiles import TPU_V5E_POD
+
+        st = ClusterState(
+            gpus={
+                "a0": GPUState("a0", A100_80GB),
+                "t0": GPUState("t0", TPU_V5E_POD),
+            }
+        )
+        ws = [
+            Workload("wa", 9, device_kind="A100-80GB"),
+            Workload("wt", 3, device_kind="TPUv5e-16x16-pod"),
+        ]
+        res = PlacementEngine("rule_based").deploy(st, ws)
+        assert not res.pending
+        assert st.gpu_of("wa") == "a0" and st.gpu_of("wt") == "t0"
+        st.validate()
+
+
+# ---------------------------------------------------------------------------
+# transaction invariants
+# ---------------------------------------------------------------------------
+class TestTransactions:
+    def _seed_state(self):
+        st = ClusterState.homogeneous(3)
+        for wid, pid, gid, idx in [
+            ("a", 5, "gpu0", 0), ("b", 14, "gpu0", 4),
+            ("c", 9, "gpu1", 4), ("d", 19, "gpu2", 6),
+        ]:
+            st.add_workload(Workload(wid, pid))
+            st.place(wid, gid, idx)
+        return st
+
+    def test_rollback_restores_byte_identical_state(self):
+        st = self._seed_state()
+        before = _snapshot(st)
+        with st.transaction() as txn:
+            st.remove("b", "gpu0")
+            st.remove("a", "gpu0")
+            st.add_workload(Workload("e", 15))
+            st.place("e", "gpu0", 6)
+            st.place("a", "gpu1", 0)
+            txn.rollback()
+        assert _snapshot(st) == before
+        st.validate()
+
+    def test_remove_in_middle_restores_list_order(self):
+        st = self._seed_state()
+        # gpu0 has [a, b]; remove the first, roll back, order must hold.
+        order_before = [p.wid for p in st.gpus["gpu0"].placements]
+        with st.transaction() as txn:
+            st.remove("a", "gpu0")
+            txn.rollback()
+        assert [p.wid for p in st.gpus["gpu0"].placements] == order_before
+
+    def test_commit_keeps_mutations(self):
+        st = self._seed_state()
+        with st.transaction():
+            st.remove("d", "gpu2")
+            st.place("d", "gpu1", 0)
+        assert st.gpu_of("d") == "gpu1"
+        st.validate()
+
+    def test_mutation_after_inner_rollback_journals_to_outer(self):
+        """Ops after an inner rollback (inner still on the stack) must be
+        undone by the outer rollback — journal to the nearest OPEN txn."""
+        st = self._seed_state()
+        before = _snapshot(st)
+        with st.transaction() as outer:
+            with st.transaction() as inner:
+                st.remove("d", "gpu2")
+                inner.rollback()
+                st.remove("c", "gpu1")  # after rollback, before inner exits
+            outer.rollback()
+        assert _snapshot(st) == before
+
+    def test_single_kind_fleet_rejects_mismatched_device_kind(self):
+        st = ClusterState.homogeneous(2)
+        bad = Workload("w", 2, device_kind="TPUv5e-16x16-pod")
+        with pytest.raises(ValueError, match="targets"):
+            PlacementEngine("first_fit").deploy(st, [bad])
+        assert "w" not in st.workloads  # state untouched
+
+    def test_nested_commit_then_outer_rollback(self):
+        st = self._seed_state()
+        before = _snapshot(st)
+        with st.transaction() as outer:
+            with st.transaction():
+                st.remove("d", "gpu2")
+                st.place("d", "gpu1", 0)
+            assert st.gpu_of("d") == "gpu1"  # inner committed
+            outer.rollback()
+        assert _snapshot(st) == before
+
+    def test_exception_rolls_back(self):
+        st = self._seed_state()
+        before = _snapshot(st)
+        with pytest.raises(RuntimeError):
+            with st.transaction():
+                st.remove("c", "gpu1")
+                raise RuntimeError("boom")
+        assert _snapshot(st) == before
+
+    def test_add_workload_overwrite_restored(self):
+        st = self._seed_state()
+        orig = st.workloads["a"]
+        with st.transaction() as txn:
+            st.add_workload(Workload("a", 19, model="other"))
+            st.add_workload(Workload("z", 15))
+            txn.rollback()
+        assert st.workloads["a"] is orig
+        assert "z" not in st.workloads
+
+    def test_cache_survives_direct_list_mutation(self):
+        """Backtracking callers edit .placements directly; caches must follow."""
+        from repro.core.profiles import A100_80GB
+        from repro.core.state import Placement
+
+        g = GPUState("g0")
+        g.place("a", 9, 4)
+        assert g.free_gpu_slices() == [0, 1, 2, 3]
+        g.placements.append(Placement("b", 14, 0))  # bypasses place()
+        assert g.used_memory_slices() == 6
+        assert g.free_gpu_slices() == [2, 3]
+        g.placements.remove(Placement("b", 14, 0))
+        assert g.free_gpu_slices() == [0, 1, 2, 3]
+        assert g.used_memory_slices() == 4
+        assert g.can_place_at(A100_80GB.profile(5), 0)  # 4g fits again at 0

@@ -1,0 +1,143 @@
+"""Online event-driven simulator tests (core/events.py)."""
+import pytest
+
+from repro.core.engine import PlacementEngine
+from repro.core.events import (
+    Event,
+    OnlineSimulator,
+    Trace,
+    build_fleet,
+    generate_trace,
+)
+from repro.core.profiles import A100_80GB
+from repro.core.state import ClusterState, Workload
+from repro.core.tpu_profiles import TPU_V5E_POD
+
+
+def _placed_wids(state: ClusterState):
+    return {p.wid for g in state.gpus.values() for p in g.placements}
+
+
+# ---------------------------------------------------------------------------
+# deterministic hand-built trace: arrivals -> departures -> compaction
+# ---------------------------------------------------------------------------
+class TestDeterministicTrace:
+    def _trace(self):
+        burst = (
+            Workload("w0", 5),   # 4g.40gb
+            Workload("w1", 9),   # 3g.40gb
+            Workload("w2", 14),  # 2g.20gb
+            Workload("w3", 15),  # 1g.20gb
+        )
+        events = [
+            Event(time=1.0, kind="arrival", workloads=burst),
+            Event(time=2.0, kind="arrival", workloads=(Workload("w4", 19),)),
+            Event(time=5.0, kind="departure", wids=("w0", "w2")),
+            Event(time=6.0, kind="compact"),
+        ]
+        return Trace(events=events, horizon=10.0)
+
+    def test_known_final_layout_and_no_stranded_placements(self):
+        state = ClusterState.homogeneous(3)
+        sim = OnlineSimulator(state, PlacementEngine("rule_based"))
+        stats = sim.run(self._trace())
+        state.validate()
+        # After the two departures, {w1: 3g, w3: 1g.20gb, w4: 1g.10gb} remain
+        # (4 + 2 + 1 memory slices); compaction packs them onto ONE GPU.
+        assert len(state.used_gpus()) == 1
+        assert _placed_wids(state) == {"w1", "w3", "w4"}
+        # zero stranded placements: every registered workload is placed and
+        # every placement belongs to a registered workload.
+        assert _placed_wids(state) == set(state.workloads)
+        assert stats.n_placed == 5 and stats.n_rejected == 0
+        assert stats.n_departed == 2
+        assert stats.n_compactions == 1
+        assert stats.n_migrations == 2  # w3 + w4 moved onto w1's GPU
+        # GPUs-used over time: 0 on [0,1), 2 on [1,6), 1 on [6,10).
+        assert stats.time_avg_gpus_used == pytest.approx((2 * 5 + 1 * 4) / 10)
+        assert stats.peak_gpus_used == 2
+
+    def test_migration_budget_rolls_back_compaction(self):
+        state = ClusterState.homogeneous(3)
+        sim = OnlineSimulator(
+            state, PlacementEngine("rule_based"), migration_budget=1
+        )
+        stats = sim.run(self._trace())
+        state.validate()
+        # Compaction needs 2 moves > budget 1 -> rolled back wholesale.
+        assert stats.n_compactions == 0
+        assert stats.n_compactions_skipped == 1
+        assert stats.n_migrations == 0
+        assert len(state.used_gpus()) == 2
+        assert _placed_wids(state) == {"w1", "w3", "w4"}
+
+    def test_periodic_compaction_injection(self):
+        state = ClusterState.homogeneous(3)
+        trace = Trace(
+            events=[
+                Event(time=1.0, kind="arrival", workloads=(Workload("a", 15),)),
+                Event(time=2.0, kind="arrival", workloads=(Workload("b", 15),)),
+            ],
+            horizon=20.0,
+        )
+        sim = OnlineSimulator(
+            state, PlacementEngine("rule_based"), compact_every=5.0
+        )
+        stats = sim.run(trace)
+        assert stats.n_compactions + stats.n_compactions_skipped == 3  # t=5,10,15
+
+
+# ---------------------------------------------------------------------------
+# generated traces over a mixed fleet
+# ---------------------------------------------------------------------------
+class TestGeneratedTraces:
+    def _fleet(self):
+        return build_fleet([(A100_80GB, 4), (TPU_V5E_POD, 2)])
+
+    def test_build_fleet_repeated_entries_do_not_collide(self):
+        fleet = build_fleet([(A100_80GB, 2), (A100_80GB, 3), (TPU_V5E_POD, 1)])
+        assert len(fleet.gpus) == 6
+        assert sorted(g for g in fleet.gpus if g.startswith("a100")) == [
+            f"a100-{i}" for i in range(5)
+        ]
+
+    def test_trace_generation_is_deterministic(self):
+        fleet = self._fleet()
+        a = generate_trace(42, fleet, horizon=50.0)
+        b = generate_trace(42, fleet, horizon=50.0)
+        assert [(e.time, e.kind, e.workloads, e.wids) for e in a.events] == [
+            (e.time, e.kind, e.workloads, e.wids) for e in b.events
+        ]
+        assert a.n_arrivals > 0
+
+    def test_workloads_target_fleet_kinds(self):
+        fleet = self._fleet()
+        tr = generate_trace(7, fleet, horizon=50.0)
+        kinds = {
+            w.device_kind for e in tr.events for w in e.workloads
+        }
+        assert kinds <= {"A100-80GB", "TPUv5e-16x16-pod"}
+        # Capacity-weighted routing should exercise both kinds on this horizon.
+        assert len(kinds) == 2
+
+    @pytest.mark.parametrize("policy", ["first_fit", "load_balanced", "rule_based"])
+    def test_mixed_fleet_trace_completes(self, policy):
+        fleet = self._fleet()
+        trace = generate_trace(0, fleet, horizon=60.0, arrival_rate=0.8)
+        sim = OnlineSimulator(
+            fleet, PlacementEngine(policy), compact_every=15.0
+        )
+        stats = sim.run(trace)
+        fleet.validate()
+        assert stats.n_arrived == stats.n_placed + stats.n_rejected
+        assert _placed_wids(fleet) == set(fleet.workloads)  # no strays
+        assert 0.0 <= stats.time_avg_mem_occupancy <= 1.0
+        assert stats.time_avg_gpus_used > 0.0
+        assert stats.peak_gpus_used <= len(fleet.gpus)
+
+    def test_departures_only_for_generated_arrivals(self):
+        fleet = self._fleet()
+        tr = generate_trace(3, fleet, horizon=40.0)
+        arrived = {w.wid for e in tr.events for w in e.workloads}
+        departing = {wid for e in tr.events for wid in e.wids}
+        assert departing <= arrived

@@ -35,6 +35,7 @@ class TestWPM:
         res = solve_wpm(st, [Workload("n", 5)], movable=False, allow_reconfig=False)
         assert [w.wid for w in res.pending] == ["n"]  # 4g fits only at idx 0
 
+    @pytest.mark.slow
     def test_joint_mip_beats_or_matches_fixed_mip(self):
         for seed in (0, 1, 2):
             tc = generate_test_case(seed, n_gpus=8)
@@ -73,6 +74,7 @@ class TestWPM:
         m = metrics.evaluate(res.state, st, list(st.workloads.values()))
         assert m.n_migrations == 0
 
+    @pytest.mark.slow
     def test_all_existing_remain_placed(self):
         for seed in (3, 4):
             tc = generate_test_case(seed, n_gpus=8)
