@@ -16,14 +16,25 @@ Usage:
   python -m benchmarks.placement_bench --case initial --gpus 8 --cases 100
   python -m benchmarks.placement_bench --trace --gpus 8 --tpu-pods 2 \\
       --horizon 200 --policies first_fit load_balanced rule_based
+  python -m benchmarks.placement_bench --fleet-scale 256 1024
 
 ``--trace`` switches to the online mode: a seeded arrival/departure/burst
 trace over a mixed A100 + TPU-pod fleet, periodic compaction with an
 optional migration budget, reporting time-averaged GPUs-used and wastage.
+
+``--fleet-scale`` benchmarks the vectorized placement fabric
+(core/fabric.py) against the scalar path on large fleets: per size, one
+deploy of a ~60%-load test case through first_fit and rule_based with the
+fabric off vs on (placements are identical — the speedup is free), plus the
+fabric-native frag_aware policy, plus a short online trace per policy.
+
+Every run also emits a machine-readable ``BENCH_placement.json`` (disable
+with ``--json ''``) so the repo's perf trajectory is tracked across PRs.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 from typing import Dict, Optional, Sequence
 
@@ -35,15 +46,18 @@ from repro.core.simulator import TestCase, generate_test_case
 from repro.core.tpu_profiles import TPU_V5E_POD
 
 APPROACHES = {
-    "initial": ("first_fit", "load_balanced", "rule_based", "mip", "joint_mip"),
-    "compaction": ("first_fit", "load_balanced", "rule_based", "mip"),
-    "reconfiguration": ("first_fit", "load_balanced", "rule_based", "mip", "patterns"),
+    "initial": ("first_fit", "load_balanced", "rule_based", "frag_aware",
+                "mip", "joint_mip"),
+    "compaction": ("first_fit", "load_balanced", "rule_based", "frag_aware",
+                   "mip"),
+    "reconfiguration": ("first_fit", "load_balanced", "rule_based",
+                        "frag_aware", "mip", "patterns"),
 }
 
 _METRICS = (
     "n_gpus", "memory_wastage", "compute_wastage", "availability",
     "migration_size", "pending_model_size", "sequential_migrations",
-    "memory_utilization", "compute_utilization",
+    "memory_utilization", "compute_utilization", "fragmentation",
 )
 
 
@@ -183,6 +197,102 @@ def print_trace_table(table: Dict[str, Dict[str, float]], header: str) -> None:
         print(a.ljust(15) + "".join(f"{row[c]:13.3f}" for c in cols))
 
 
+# ---------------------------------------------------------------------------
+# fleet-scale mode (--fleet-scale): scalar path vs vectorized fabric
+# ---------------------------------------------------------------------------
+#: metrics surfaced in the fleet-scale comparison (the acceptance metrics:
+#: GPUs used + wastage + fragmentation + pending).
+_SCALE_METRICS = (
+    "n_gpus", "compute_wastage", "memory_wastage", "fragmentation", "n_pending",
+)
+
+
+def _deploy_once(tc: TestCase, policy: str, fabric: str) -> Dict[str, float]:
+    st = tc.initial.clone()
+    eng = PlacementEngine(policy, fabric=fabric)
+    res = eng.deploy(st, tc.new_workloads)
+    st.validate()
+    all_wl = list(tc.initial.workloads.values()) + list(tc.new_workloads)
+    m = metrics.evaluate(st, tc.initial, all_wl)
+    out = {k: float(getattr(m, k)) for k in _SCALE_METRICS}
+    out["seconds"] = res.seconds
+    return out
+
+
+def run_fleet_scale(
+    n_gpus: int, seed: int, horizon: float
+) -> Dict[str, Dict[str, float]]:
+    """One fleet size: deploys (scalar vs fabric) + a short online trace.
+
+    The fabric deploy is run twice and the warm timing reported (the first
+    call pays one-off jit compilation for the fleet shape; ``cold_seconds``
+    is kept in the JSON for honesty).
+    """
+    tc = generate_test_case(seed, n_gpus=n_gpus)
+    rows: Dict[str, Dict[str, float]] = {}
+    for policy in ("first_fit", "rule_based"):
+        scalar = _deploy_once(tc, policy, fabric="off")
+        cold = _deploy_once(tc, policy, fabric="on")
+        warm = _deploy_once(tc, policy, fabric="on")
+        assert all(
+            warm[k] == scalar[k] for k in _SCALE_METRICS
+        ), f"fabric parity broken for {policy} @ {n_gpus}"
+        row = dict(warm)
+        row["scalar_seconds"] = scalar["seconds"]
+        row["cold_seconds"] = cold["seconds"]
+        row["speedup"] = scalar["seconds"] / max(warm["seconds"], 1e-9)
+        rows[policy] = row
+    frag = _deploy_once(tc, "frag_aware", fabric="on")
+    frag["scalar_seconds"] = float("nan")
+    frag["cold_seconds"] = frag["seconds"]
+    frag["speedup"] = float("nan")
+    rows["frag_aware"] = frag
+
+    # Short online trace over the same fleet size (arrival rate scaled so
+    # steady-state load covers roughly half the fleet); compaction off — this
+    # measures deploy latency and GPUs-used/wastage per policy at scale.
+    for policy in ("first_fit", "rule_based", "frag_aware"):
+        fleet = build_fleet([(A100_80GB, n_gpus)])
+        trace = generate_trace(
+            seed, fleet, horizon=horizon, arrival_rate=max(1.0, n_gpus / 8.0),
+            mean_lifetime=horizon * 0.6,
+        )
+        stats = OnlineSimulator(fleet, PlacementEngine(policy)).run(trace)
+        fleet.validate()
+        rows[policy]["trace_avg_gpus"] = stats.time_avg_gpus_used
+        rows[policy]["trace_avg_cwaste"] = stats.time_avg_compute_waste
+        rows[policy]["trace_engine_seconds"] = stats.engine_seconds
+    return rows
+
+
+def print_fleet_scale(n_gpus: int, rows: Dict[str, Dict[str, float]]) -> None:
+    print(f"\n== fleet-scale @ {n_gpus} GPUs (deploy; fabric vs scalar) ==")
+    cols = (
+        "scalar_seconds", "seconds", "speedup", "n_gpus", "compute_wastage",
+        "memory_wastage", "fragmentation", "n_pending",
+        "trace_avg_gpus", "trace_avg_cwaste", "trace_engine_seconds",
+    )
+    short = {
+        "scalar_seconds": "scalar_s", "seconds": "fabric_s",
+        "compute_wastage": "cwaste", "memory_wastage": "mwaste",
+        "fragmentation": "frag", "trace_avg_gpus": "tr_gpus",
+        "trace_avg_cwaste": "tr_cwaste", "trace_engine_seconds": "tr_eng_s",
+    }
+    print("policy".ljust(12) + "".join(short.get(c, c)[:10].rjust(11) for c in cols))
+    for a, row in rows.items():
+        print(a.ljust(12) + "".join(f"{row.get(c, float('nan')):11.3f}" for c in cols))
+
+
+def write_json(path: str, report: Dict) -> None:
+    if not path:
+        return
+    report["schema"] = "placement_bench/v1"
+    report["generated_unix"] = time.time()
+    with open(path, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+    print(f"\nwrote {path}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--case", default="all",
@@ -205,7 +315,28 @@ def main() -> None:
     ap.add_argument("--mean-lifetime", type=float, default=40.0)
     ap.add_argument("--compact-every", type=float, default=25.0)
     ap.add_argument("--migration-budget", type=int, default=None)
+    # fleet-scale mode
+    ap.add_argument("--fleet-scale", type=int, nargs="+", default=None,
+                    metavar="N", help="fleet sizes for the fabric-vs-scalar "
+                    "comparison (e.g. 256 1024 4096)")
+    ap.add_argument("--fleet-horizon", type=float, default=20.0,
+                    help="trace horizon per fleet-scale size")
+    ap.add_argument("--json", default="BENCH_placement.json",
+                    help="machine-readable output path ('' disables)")
     args = ap.parse_args()
+
+    report: Dict = {"args": {k: v for k, v in vars(args).items() if k != "json"}}
+
+    if args.fleet_scale:
+        report["fleet_scale"] = {}
+        for n in args.fleet_scale:
+            t0 = time.time()
+            rows = run_fleet_scale(n, args.seed, args.fleet_horizon)
+            print_fleet_scale(n, rows)
+            print(f"   ({time.time() - t0:.0f}s)")
+            report["fleet_scale"][str(n)] = rows
+        write_json(args.json, report)
+        return
 
     if args.trace:
         n_a100 = args.gpus[0]
@@ -221,18 +352,23 @@ def main() -> None:
             f"{n_a100}x A100 + {args.tpu_pods}x TPU pod, horizon {args.horizon}",
         )
         print(f"   ({time.time() - t0:.0f}s)")
+        report["trace"] = table
+        write_json(args.json, report)
         return
 
     cases = (
         ["initial", "compaction", "reconfiguration"]
         if args.case == "all" else [args.case]
     )
+    report["snapshot"] = {}
     for case in cases:
         for g in args.gpus:
             t0 = time.time()
             table = run_case(case, g, args.cases, args.time_limit, args.mip_cases)
             print_table(case, g, table)
             print(f"   ({time.time() - t0:.0f}s)")
+            report["snapshot"][f"{case}@{g}"] = table
+    write_json(args.json, report)
 
 
 if __name__ == "__main__":

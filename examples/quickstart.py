@@ -21,11 +21,11 @@ def main() -> None:
     for name in ("first_fit", "load_balanced", "rule_based", "mip", "joint_mip"):
         st = tc.initial.clone()
         if name == "first_fit":
-            pending = baselines.first_fit(st, tc.new_workloads)
+            baselines.first_fit(st, tc.new_workloads)
         elif name == "load_balanced":
-            pending = baselines.load_balanced(st, tc.new_workloads)
+            baselines.load_balanced(st, tc.new_workloads)
         elif name == "rule_based":
-            pending = heuristic.initial_deployment(st, tc.new_workloads)
+            heuristic.initial_deployment(st, tc.new_workloads)
         else:
             res = solve_wpm(
                 st, tc.new_workloads,
@@ -33,7 +33,7 @@ def main() -> None:
                 allow_reconfig=(name == "joint_mip"),
                 time_limit=10.0,
             )
-            st, pending = res.state, res.pending
+            st = res.state
         st.validate()
         m = metrics.evaluate(
             st, tc.initial, list(tc.initial.workloads.values()) + tc.new_workloads

@@ -13,8 +13,10 @@ Public API:
     metrics      — Table-3 evaluation metrics
     migration    — migration planning (one-shot vs sequential)
     simulator    — Sec-5.1 random test-case generation
+    fleetgen     — shared (possibly heterogeneous) fleet construction
     engine       — PlacementEngine: all approaches behind one interface
     events       — event-driven online simulation over timestamped traces
+    fabric       — vectorized fleet-scale feasibility/scoring (JAX-batched)
 """
 from .engine import EngineResult, PlacementEngine, available_policies  # noqa: F401
 from .profiles import A100_80GB, H100_96GB, DeviceModel, Profile  # noqa: F401

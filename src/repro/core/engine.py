@@ -21,6 +21,13 @@ policy per group, so the policy implementations stay single-device.
 Baseline compaction/reconfiguration replays (paper Sec 5.2.2/5.2.3) used to
 live in the benchmark harness; they are policy methods now, built on the
 transactional state instead of whole-cluster clones.
+
+Fleet-scale deployments route through the vectorized fabric
+(``core/fabric.py``): with ``fabric="auto"`` (default), first_fit /
+load_balanced / rule_based deploys on fleets of >= ``FABRIC_AUTO_MIN_GPUS``
+GPUs use the JAX-batched feasibility kernels — placement-identical to the
+scalar path, an order of magnitude faster at 1024+ GPUs.  The ``frag_aware``
+policy (fragmentation-aware scoring per Ting et al.) is fabric-native.
 """
 from __future__ import annotations
 
@@ -29,7 +36,7 @@ import time
 from typing import Callable, Dict, List, Optional, Sequence, Tuple, Type
 
 from . import baselines, heuristic
-from .state import ClusterState, GPUState, Workload
+from .state import ClusterState, Workload
 
 __all__ = [
     "EngineResult",
@@ -56,14 +63,37 @@ class EngineResult:
 # ---------------------------------------------------------------------------
 # policy interface
 # ---------------------------------------------------------------------------
+#: fleets at or above this size route deployments through the vectorized
+#: fabric (core/fabric.py) when ``fabric="auto"`` — below it, the scalar
+#: path's lower constant factors win (measured: at 128 GPUs the fabric is
+#: ~1.7x faster for first_fit and ~3x for rule_based; at 64 it can lose).
+FABRIC_AUTO_MIN_GPUS = 128
+
+
 class PlacementPolicy:
-    """One placement approach; verbs mutate a *single-device* state in place."""
+    """One placement approach; verbs mutate a *single-device* state in place.
+
+    ``fabric`` selects the vectorized fast path for policies that have one
+    (first_fit / load_balanced / rule_based deploys): ``"auto"`` uses it on
+    fleets of >= FABRIC_AUTO_MIN_GPUS GPUs, ``"on"`` / ``"off"`` force it.
+    The fabric paths are placement-identical to the scalar references.
+    """
 
     name: str = "abstract"
     supports: Tuple[str, ...] = VERBS
 
-    def __init__(self, time_limit: float = 30.0):
+    def __init__(self, time_limit: float = 30.0, fabric: str = "auto"):
+        if fabric not in ("auto", "on", "off"):
+            raise ValueError(f"fabric must be auto/on/off, got {fabric!r}")
         self.time_limit = time_limit
+        self.fabric = fabric
+
+    def _use_fabric(self, state: ClusterState) -> bool:
+        if self.fabric == "on":
+            return True
+        if self.fabric == "off":
+            return False
+        return len(state.gpus) >= FABRIC_AUTO_MIN_GPUS
 
     def deploy(
         self, state: ClusterState, new_workloads: Sequence[Workload]
@@ -108,8 +138,13 @@ class _BaselinePolicy(PlacementPolicy):
 
     _spot: Callable = None  # (state, w, candidates) -> (gid, idx) | None
     _deploy: Callable = None
+    _fabric_deploy: str = ""  # fabric fast-path function name
 
     def deploy(self, state, new_workloads):
+        if self._fabric_deploy and self._use_fabric(state):
+            from . import fabric
+
+            return getattr(fabric, self._fabric_deploy)(state, new_workloads)
         return type(self)._deploy(state, new_workloads)
 
     def compact(self, state):
@@ -155,28 +190,23 @@ class _BaselinePolicy(PlacementPolicy):
     def reconfigure(self, state):
         """Re-place ALL workloads from scratch with the baseline rule
         (arrival order, indexes from 0 — paper Sec 5.2.3)."""
-        workloads = state.placed_workloads()
-        fresh = ClusterState(
-            gpus={gid: GPUState(gid, state.gpus[gid].device) for gid in state.gpus},
-            workloads={w.wid: w for w in workloads},
-        )
-        pending = type(self)._deploy(fresh, workloads)
-        for gid in state.gpus:
-            state.gpus[gid] = fresh.gpus[gid]
-        state.workloads.update(fresh.workloads)
-        return pending
+        from .fabric import replay_fresh_deploy
+
+        return replay_fresh_deploy(state, self.deploy)  # fabric-accel if routed
 
 
 class FirstFitPolicy(_BaselinePolicy):
     name = "first_fit"
     _spot = staticmethod(_spot_first_fit)
     _deploy = staticmethod(baselines.first_fit)
+    _fabric_deploy = "fabric_first_fit"
 
 
 class LoadBalancedPolicy(_BaselinePolicy):
     name = "load_balanced"
     _spot = staticmethod(_spot_load_balanced)
     _deploy = staticmethod(baselines.load_balanced)
+    _fabric_deploy = "fabric_load_balanced"
 
 
 # ---------------------------------------------------------------------------
@@ -186,6 +216,10 @@ class RuleBasedPolicy(PlacementPolicy):
     name = "rule_based"
 
     def deploy(self, state, new_workloads):
+        if self._use_fabric(state):
+            from . import fabric
+
+            return fabric.fabric_initial_deployment(state, new_workloads)
         return heuristic.initial_deployment(state, new_workloads)
 
     def compact(self, state):
@@ -193,6 +227,31 @@ class RuleBasedPolicy(PlacementPolicy):
 
     def reconfigure(self, state):
         return heuristic.reconfiguration(state)
+
+
+# ---------------------------------------------------------------------------
+# fragmentation-aware policy (beyond-paper; Ting et al. scoring on the fabric)
+# ---------------------------------------------------------------------------
+class FragAwarePolicy(PlacementPolicy):
+    """Fabric-native policy scoring every candidate triple by post-placement
+    fragmentation delta + wastage (Ting et al.); runs at any fleet size."""
+
+    name = "frag_aware"
+
+    def deploy(self, state, new_workloads):
+        from . import fabric
+
+        return fabric.fabric_frag_aware_deploy(state, new_workloads)
+
+    def compact(self, state):
+        from . import fabric
+
+        fabric.fabric_frag_aware_compact(state)
+
+    def reconfigure(self, state):
+        from . import fabric
+
+        return fabric.fabric_frag_aware_reconfigure(state)
 
 
 # ---------------------------------------------------------------------------
@@ -292,6 +351,7 @@ POLICIES: Dict[str, Type[PlacementPolicy]] = {
         FirstFitPolicy,
         LoadBalancedPolicy,
         RuleBasedPolicy,
+        FragAwarePolicy,
         MIPPolicy,
         JointMIPPolicy,
         PatternsPolicy,
@@ -305,11 +365,13 @@ def available_policies() -> Tuple[str, ...]:
     return tuple(POLICIES)
 
 
-def get_policy(name: str, time_limit: float = 30.0) -> PlacementPolicy:
+def get_policy(
+    name: str, time_limit: float = 30.0, fabric: str = "auto"
+) -> PlacementPolicy:
     key = _ALIASES.get(name, name)
     if key not in POLICIES:
         raise ValueError(f"unknown policy {name!r}; choose from {available_policies()}")
-    return POLICIES[key](time_limit=time_limit)
+    return POLICIES[key](time_limit=time_limit, fabric=fabric)
 
 
 # ---------------------------------------------------------------------------
@@ -324,8 +386,13 @@ class PlacementEngine:
     the real ``GPUState`` objects, so results land in the real state.
     """
 
-    def __init__(self, policy: str = "rule_based", time_limit: float = 30.0):
-        self.policy = get_policy(policy, time_limit)
+    def __init__(
+        self,
+        policy: str = "rule_based",
+        time_limit: float = 30.0,
+        fabric: str = "auto",
+    ):
+        self.policy = get_policy(policy, time_limit, fabric)
 
     @property
     def policy_name(self) -> str:
@@ -341,10 +408,28 @@ class PlacementEngine:
 
     @staticmethod
     def _subview(state: ClusterState, gids: Sequence[str]) -> ClusterState:
-        """A per-group view sharing GPUState objects and the workload dict."""
-        sub = ClusterState(
-            gpus={gid: state.gpus[gid] for gid in gids}, workloads=state.workloads
-        )
+        """A per-group view sharing GPUState objects and the workload dict.
+
+        Subviews are memoized on the parent state (keyed by the gid tuple)
+        so that the fabric mirror a fast-path deploy attaches to the view
+        survives across engine calls — the online-trace hot path.  On reuse
+        the gpu/workload references are re-pointed at the parent's current
+        objects; the fabric layer re-syncs by placement content, so wholesale
+        GPUState replacement (MIP adoption, budget rollback) stays safe.
+        """
+        subs = state.__dict__.setdefault("_subviews", {})
+        key = tuple(gids)
+        sub = subs.get(key)
+        if sub is None:
+            sub = ClusterState(
+                gpus={gid: state.gpus[gid] for gid in gids},
+                workloads=state.workloads,
+            )
+            subs[key] = sub
+        else:
+            for gid in key:
+                sub.gpus[gid] = state.gpus[gid]
+            sub.workloads = state.workloads
         return sub
 
     def _route(
@@ -352,6 +437,8 @@ class PlacementEngine:
     ) -> Dict[str, List[Workload]]:
         """Split workloads across device groups by ``device_kind``."""
         groups = self._groups(state)
+        if not groups:  # empty cluster: nothing can host anything
+            return {}
         if len(groups) == 1:
             kind = next(iter(groups))
             for w in workloads:
@@ -400,10 +487,15 @@ class PlacementEngine:
         self._check("deploy")
         t0 = time.time()
         routed = self._route(state, new_workloads)
-        multi = len(routed) > 1
+        if not routed:  # empty cluster: scalar-policy parity = all pending
+            for w in new_workloads:
+                state.add_workload(w)
+            return EngineResult(
+                self.policy.name, "deploy", list(new_workloads), time.time() - t0
+            )
 
         def _deploy_group(sub, kind):
-            if multi and not routed[kind]:
+            if not routed[kind]:
                 return []  # don't wake solver policies for untouched groups
             return self.policy.deploy(sub, routed[kind])
 

@@ -23,13 +23,14 @@ cost) and wastage over the trace horizon.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
 from .engine import PlacementEngine
-from .profiles import A100_80GB, DeviceModel
-from .state import ClusterState, GPUState, Workload
+from .fleetgen import FleetSpec, build_fleet  # noqa: F401  (re-exported API)
+from .profiles import DeviceModel
+from .state import ClusterState, Workload
 
 __all__ = [
     "Event",
@@ -40,9 +41,6 @@ __all__ = [
     "TraceStats",
     "OnlineSimulator",
 ]
-
-#: (device model, count) pairs describing a possibly-mixed fleet.
-FleetSpec = Sequence[Tuple[DeviceModel, int]]
 
 #: default per-device profile pools for random arrivals (same spirit as
 #: simulator._DEFAULT_PROFILE_POOL: skip the trivially-whole-device profile).
@@ -82,24 +80,6 @@ class Trace:
     @property
     def n_arrivals(self) -> int:
         return sum(len(e.workloads) for e in self.events if e.kind == "arrival")
-
-
-def build_fleet(spec: FleetSpec) -> ClusterState:
-    """A (possibly heterogeneous) cluster; gids are '<tag>-<i>'.
-
-    Indexes continue across spec entries sharing a tag, so e.g. two
-    ``(A100_80GB, n)`` entries yield distinct gids instead of colliding.
-    """
-    gpus: Dict[str, GPUState] = {}
-    next_i: Dict[str, int] = {}
-    for device, count in spec:
-        tag = device.name.split("-")[0].lower()
-        for _ in range(count):
-            i = next_i.get(tag, 0)
-            next_i[tag] = i + 1
-            gid = f"{tag}-{i}"
-            gpus[gid] = GPUState(gid, device)
-    return ClusterState(gpus=gpus)
 
 
 def generate_trace(
@@ -230,7 +210,6 @@ class OnlineSimulator:
             next_c += self.compact_every
 
     def run(self, trace: Trace) -> TraceStats:
-        st = self.state
         stats = TraceStats(
             policy=self.engine.policy_name,
             horizon=trace.horizon,

@@ -15,7 +15,6 @@ waste, fragmentation).
 """
 from __future__ import annotations
 
-import itertools
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from .profiles import DeviceModel, Profile

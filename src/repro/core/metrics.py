@@ -27,6 +27,9 @@ class PlacementMetrics:
     compute_utilization: float
     n_pending: int
     n_migrations: int
+    #: mean free-slice fragmentation over used GPUs (Ting et al.): 0 = every
+    #: GPU's free space is one contiguous run, ->1 = shattered free space.
+    fragmentation: float = 0.0
 
     def as_dict(self) -> Dict[str, float]:
         return dataclasses.asdict(self)
@@ -100,4 +103,7 @@ def evaluate(
         compute_utilization=used_cmp / tot_cmp if tot_cmp else 0.0,
         n_pending=len(pending),
         n_migrations=n_migrations,
+        fragmentation=(
+            sum(g.fragmentation() for g in used) / len(used) if used else 0.0
+        ),
     )

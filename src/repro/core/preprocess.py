@@ -20,7 +20,7 @@ indexing step can verify real placements inside it.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Tuple
+from typing import List, Tuple
 
 from .profiles import DeviceModel, Profile
 from .state import GPUState
@@ -62,7 +62,6 @@ class FreePartition:
 def determine_free_partitions(gpu: GPUState, prefix: str = "") -> List[FreePartition]:
     """Algorithm 1 — ``P_g`` for one partially-partitioned GPU."""
     device = gpu.device
-    occ = gpu.memory_occupancy()
     hypo = gpu.clone()
     out: List[FreePartition] = []
     profiles = [p for p in device.profiles_sorted_desc() if not p.media_extensions]

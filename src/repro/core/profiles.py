@@ -28,7 +28,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Dict, Sequence, Tuple
+from typing import Dict, Tuple
 
 __all__ = [
     "Profile",

@@ -11,12 +11,13 @@ A test case mimics a cluster with one or more 8-GPU nodes:
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence
+from typing import List, Sequence
 
 import numpy as np
 
+from .fleetgen import build_fleet
 from .profiles import A100_80GB, DeviceModel
-from .state import ClusterState, GPUState, Workload
+from .state import ClusterState, Workload
 
 __all__ = ["TestCase", "generate_test_case", "random_workloads"]
 
@@ -69,7 +70,8 @@ def generate_test_case(
 ) -> TestCase:
     """One Sec-5.1 test case (seeded, reproducible)."""
     rng = np.random.default_rng(seed)
-    state = ClusterState.homogeneous(n_gpus, device)
+    # Shared fleet builder (fleetgen) with the historical 'gpu{i}' naming.
+    state = build_fleet([(device, n_gpus)], gid_format="gpu{i}")
     gids = state.ordered_gids()
     n_alloc = int(round(n_gpus * allocated_fraction))
     alloc_gids = list(rng.choice(gids, size=n_alloc, replace=False))

@@ -245,6 +245,28 @@ class GPUState:
             return 1
         return 0
 
+    def fragmentation(self) -> float:
+        """Free-slice fragmentation in [0, 1) (Ting et al.'s free-space health).
+
+        ``1 - largest_free_run / total_free`` over memory positions: 0.0 when
+        the free space is one contiguous run (or the GPU is full), approaching
+        1 as the free space shatters into many small runs that cannot host
+        large profiles.
+        """
+        occ = self._occupancy()
+        total = best = run = 0
+        for pos in range(self.device.n_memory_slices):
+            if occ[pos] is None:
+                total += 1
+                run += 1
+                if run > best:
+                    best = run
+            else:
+                run = 0
+        if total == 0:
+            return 0.0
+        return 1.0 - best / total
+
     def joint_slice_utilization(self) -> float:
         """(s_m + s_c) / (S_m + S_c) — heuristic GPU sort key (Sec 4.2)."""
         self._occupancy()

@@ -12,8 +12,6 @@ The serving hot spot of the paper's workloads.  TPU adaptation:
 from __future__ import annotations
 
 import functools
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl

@@ -8,7 +8,6 @@ One call site for the model code.  ``set_impl`` switches globally:
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax

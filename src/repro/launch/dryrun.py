@@ -11,15 +11,13 @@ Usage:
 Artifacts: artifacts/dryrun/<mesh>/<arch>__<shape>.json
 """
 import argparse
-import dataclasses
 import json
 import math
 import time
 import traceback
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import ARCHS, SHAPES, get_config

@@ -7,7 +7,6 @@ call site.  Softmax/logits accumulate in f32 regardless of param dtype.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Dict, Optional, Tuple
 
 import jax

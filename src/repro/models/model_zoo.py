@@ -3,7 +3,7 @@ ShapeDtypeStruct input specs for every assigned input shape."""
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -11,10 +11,13 @@ ClusterServer then drives the three paper use cases over the live cluster:
   * ``reconfigure`` -> reconfiguration (Sec 2.3.3), maintenance windows
 
 Placement policy is pluggable through ``core.engine.PlacementEngine``: the
-Sec-4.2 heuristic (default), the WPM MIP, or the first-fit / load-balanced
-baselines — the same approaches the paper benchmarks, now acting on replicas
-instead of synthetic workloads.  This layer holds NO policy dispatch of its
-own; it only translates replicas <-> workloads and calls engine verbs.
+Sec-4.2 heuristic (default), the WPM MIP, the fragmentation-aware
+``frag_aware`` policy, or the first-fit / load-balanced baselines — the same
+approaches the paper benchmarks, now acting on replicas instead of synthetic
+workloads.  This layer holds NO policy dispatch of its own; it only
+translates replicas <-> workloads and calls engine verbs.  ``fabric``
+("auto"/"on"/"off") selects the vectorized fleet-scale fast path
+(``core/fabric.py``) for large clusters.
 """
 from __future__ import annotations
 
@@ -23,7 +26,6 @@ import itertools
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 
 from ..configs import get_config
 from ..core.engine import PlacementEngine
@@ -111,9 +113,10 @@ class ClusterServer:
         device: DeviceModel = TPU_V5E_POD,
         policy: str = "heuristic",
         mip_time_limit: float = 30.0,
+        fabric: str = "auto",
     ):
         self.device = device
-        self.engine = PlacementEngine(policy, time_limit=mip_time_limit)
+        self.engine = PlacementEngine(policy, time_limit=mip_time_limit, fabric=fabric)
         self.policy = self.engine.policy_name
         self.mip_time_limit = mip_time_limit
         self.state = ClusterState.homogeneous(n_nodes, device, prefix="node")

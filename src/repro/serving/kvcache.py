@@ -18,11 +18,10 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 Params = Dict[str, Any]
 

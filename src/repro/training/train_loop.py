@@ -8,7 +8,7 @@ in/out specs by the launcher (see launch/train.py and launch/dryrun.py).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Tuple
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp

@@ -155,8 +155,8 @@ class TestReconfigurationParity:
 class TestEngineSurface:
     def test_registry(self):
         assert set(available_policies()) == {
-            "first_fit", "load_balanced", "rule_based", "mip", "joint_mip",
-            "patterns",
+            "first_fit", "load_balanced", "rule_based", "frag_aware", "mip",
+            "joint_mip", "patterns",
         }
         assert get_policy("heuristic").name == "rule_based"  # legacy alias
         with pytest.raises(ValueError):

@@ -1,0 +1,407 @@
+"""Vectorized placement fabric: parity with the scalar reference.
+
+The fabric's contract (core/fabric.py docstring) is *placement identity*:
+its batched feasibility kernel must agree with ``GPUState.can_place_at`` on
+every (gpu, profile, index) triple, and its policy fast paths must pick the
+same (gid, index) spots as the scalar policies — tie-breaks included — on
+randomized heterogeneous fleets.  Scoring is checked against scalar
+recomputation of wastage/fragmentation.
+"""
+import numpy as np
+import pytest
+
+from repro.core import baselines, heuristic
+from repro.core.engine import PlacementEngine
+from repro.core.fabric import (
+    FleetFabric,
+    fabric_first_fit,
+    fabric_frag_aware_compact,
+    fabric_frag_aware_deploy,
+    fabric_frag_aware_reconfigure,
+    fabric_initial_deployment,
+    fabric_load_balanced,
+)
+from repro.core.profiles import A100_80GB, H100_96GB
+from repro.core.simulator import generate_test_case, random_workloads
+from repro.core.state import ClusterState, GPUState, Workload
+from repro.core.tpu_profiles import TPU_V5E_POD
+
+SEEDS = (0, 1, 2, 3, 7)
+KERNELS = (False, True)  # use_jax
+
+
+def _random_hetero_state(seed: int) -> ClusterState:
+    """A randomly-populated mixed A100 + H100 + TPU fleet."""
+    rng = np.random.default_rng(seed)
+    state = ClusterState()
+    specs = [(A100_80GB, 5), (H100_96GB, 3), (TPU_V5E_POD, 2)]
+    wi = 0
+    for device, count in specs:
+        for i in range(count):
+            gid = f"{device.name.split('-')[0].lower()}-{i}"
+            gpu = GPUState(gid, device)
+            state.gpus[gid] = gpu
+            pool = [p.profile_id for p in device.profiles]
+            for _ in range(int(rng.integers(0, 5))):
+                pid = int(rng.choice(pool))
+                idx = gpu.first_feasible_index(device.profile(pid))
+                if idx is None:
+                    continue
+                w = Workload(wid=f"w{wi}", profile_id=pid, device_kind=device.name)
+                state.add_workload(w)
+                gpu.place(w.wid, pid, idx)
+                wi += 1
+    return state
+
+
+def _placements(state: ClusterState):
+    return {
+        (gid, p.wid, p.profile_id, p.index)
+        for gid, g in state.gpus.items()
+        for p in g.placements
+    }
+
+
+# ---------------------------------------------------------------------------
+# kernel parity: feasibility over ALL triples == scalar can_place_at
+# ---------------------------------------------------------------------------
+class TestFeasibilityParity:
+    @pytest.mark.parametrize("use_jax", KERNELS)
+    @pytest.mark.parametrize("seed", SEEDS)
+    def test_all_triples_heterogeneous(self, seed, use_jax):
+        state = _random_hetero_state(seed)
+        fab = FleetFabric(state, use_jax=use_jax)
+        feas = fab.feasible_all()
+        for r, gid in enumerate(fab.gids):
+            gpu = state.gpus[gid]
+            for p, prof in enumerate(gpu.device.profiles):
+                for i in range(fab.M):
+                    assert bool(feas[r, p, i]) == gpu.can_place_at(prof, i), (
+                        gid, prof.name, i,
+                    )
+            # slots past this device's profile count are never feasible
+            for p in range(len(gpu.device.profiles), fab.P_max):
+                assert not feas[r, p].any()
+
+    def test_jax_and_numpy_kernels_agree(self):
+        state = _random_hetero_state(11)
+        a = FleetFabric(state, use_jax=False).feasible_all()
+        b = FleetFabric(state, use_jax=True).feasible_all()
+        np.testing.assert_array_equal(a, b)
+
+    @pytest.mark.parametrize("use_jax", KERNELS)
+    def test_incremental_row_refresh(self, use_jax):
+        """apply/unapply keep the cached all-triple slab exact."""
+        tc = generate_test_case(5, n_gpus=6)
+        state = tc.initial
+        fab = FleetFabric(state, use_jax=use_jax)
+        fab.feasible_all()  # populate the cache
+        prof = A100_80GB.profile(14)
+        spot = fab.pick_first_fit(14)
+        assert spot is not None
+        gid, idx = spot
+        state.add_workload(Workload(wid="zz", profile_id=14))
+        state.place("zz", gid, idx)
+        fab.apply(gid, prof, idx)
+        np.testing.assert_array_equal(
+            fab.feasible_all(), FleetFabric(state, use_jax=use_jax).feasible_all()
+        )
+        state.remove("zz", gid)
+        fab.unapply(gid, prof, idx)
+        np.testing.assert_array_equal(
+            fab.feasible_all(), FleetFabric(state, use_jax=use_jax).feasible_all()
+        )
+
+
+# ---------------------------------------------------------------------------
+# score parity: wastage / fragmentation vs scalar recomputation
+# ---------------------------------------------------------------------------
+class TestScoreParity:
+    @pytest.mark.parametrize("use_jax", KERNELS)
+    @pytest.mark.parametrize("seed", SEEDS[:3])
+    def test_waste_and_frag_vs_scalar(self, seed, use_jax):
+        state = _random_hetero_state(seed)
+        fab = FleetFabric(state, use_jax=use_jax)
+        for gid in fab.gids:
+            gpu = state.gpus[gid]
+            r = fab.row_of[gid]
+            for prof in gpu.device.profiles:
+                feas = fab.feasible_profile(prof.profile_id, gpu.device.name)
+                waste, frag = fab.scores_profile(prof.profile_id, gpu.device.name)
+                for i in range(gpu.device.n_memory_slices):
+                    if not feas[r, i]:
+                        continue
+                    trial = gpu.clone()
+                    before_mw = trial.memory_waste()
+                    trial.place("_t", prof.profile_id, i)
+                    want_waste = (
+                        prof.compute_waste_at(i, gpu.device.n_gpu_slices)
+                        + trial.memory_waste() - before_mw
+                    )
+                    occ = trial.memory_occupancy()
+                    runs = 0
+                    prev_free = False
+                    for pos in range(gpu.device.n_memory_slices):
+                        free = occ[pos] is None
+                        if free and not prev_free:
+                            runs += 1
+                        prev_free = free
+                    assert int(waste[r, i]) == want_waste, (gid, prof.name, i)
+                    assert int(frag[r, i]) == runs, (gid, prof.name, i)
+
+
+# ---------------------------------------------------------------------------
+# fast-path placement identity vs the scalar policies
+# ---------------------------------------------------------------------------
+class TestDeployParity:
+    @pytest.mark.parametrize("seed", SEEDS)
+    @pytest.mark.parametrize(
+        "scalar_fn,fabric_fn",
+        [
+            (baselines.first_fit, fabric_first_fit),
+            (baselines.load_balanced, fabric_load_balanced),
+            (heuristic.initial_deployment, fabric_initial_deployment),
+        ],
+        ids=["first_fit", "load_balanced", "rule_based"],
+    )
+    def test_identical_placements(self, scalar_fn, fabric_fn, seed):
+        tc = generate_test_case(seed, n_gpus=10)
+        s1, s2 = tc.initial.clone(), tc.initial.clone()
+        p1 = scalar_fn(s1, tc.new_workloads)
+        p2 = fabric_fn(s2, tc.new_workloads)
+        assert _placements(s1) == _placements(s2)
+        assert [w.wid for w in p1] == [w.wid for w in p2]
+
+    @pytest.mark.parametrize("policy", ["first_fit", "load_balanced", "rule_based"])
+    @pytest.mark.parametrize("seed", SEEDS[:3])
+    def test_engine_fabric_on_off_parity(self, policy, seed):
+        tc = generate_test_case(seed, n_gpus=12)
+        s_off, s_on = tc.initial.clone(), tc.initial.clone()
+        PlacementEngine(policy, fabric="off").deploy(s_off, tc.new_workloads)
+        PlacementEngine(policy, fabric="on").deploy(s_on, tc.new_workloads)
+        assert _placements(s_off) == _placements(s_on)
+
+    @pytest.mark.parametrize("seed", SEEDS[:3])
+    def test_heterogeneous_routed_parity(self, seed):
+        """Mixed fleet through the engine: fabric and scalar paths agree."""
+        rng = np.random.default_rng(seed)
+        spec = [(A100_80GB, 6), (H100_96GB, 4)]
+        news = []
+        for device, n in spec:
+            news += [
+                Workload(
+                    wid=f"{device.name}:{w.wid}",
+                    profile_id=w.profile_id,
+                    device_kind=device.name,
+                )
+                for w in random_workloads(rng, 3 * n, device)
+            ]
+        for policy in ("first_fit", "rule_based"):
+            states = []
+            for fabric in ("off", "on"):
+                st = ClusterState(
+                    gpus={
+                        f"{d.name.split('-')[0].lower()}{i}": GPUState(
+                            f"{d.name.split('-')[0].lower()}{i}", d
+                        )
+                        for d, n in spec
+                        for i in range(n)
+                    }
+                )
+                PlacementEngine(policy, fabric=fabric).deploy(st, news)
+                st.validate()
+                states.append(st)
+            assert _placements(states[0]) == _placements(states[1]), policy
+
+
+# ---------------------------------------------------------------------------
+# frag_aware policy semantics
+# ---------------------------------------------------------------------------
+class TestFragAware:
+    @pytest.mark.parametrize("seed", SEEDS)
+    def test_deploy_valid_and_no_worse_than_rule_based(self, seed):
+        tc = generate_test_case(seed, n_gpus=8)
+        s_rule, s_frag = tc.initial.clone(), tc.initial.clone()
+        heuristic.initial_deployment(s_rule, tc.new_workloads)
+        pend = fabric_frag_aware_deploy(s_frag, tc.new_workloads)
+        s_frag.validate()
+        from repro.core import metrics
+
+        wl = list(tc.initial.workloads.values()) + list(tc.new_workloads)
+        m_rule = metrics.evaluate(s_rule, tc.initial, wl)
+        m_frag = metrics.evaluate(s_frag, tc.initial, wl)
+        assert m_frag.n_gpus <= m_rule.n_gpus
+        assert (
+            m_frag.compute_wastage + m_frag.memory_wastage
+            <= m_rule.compute_wastage + m_rule.memory_wastage
+        )
+        assert len(pend) <= m_rule.n_pending
+
+    def test_compact_one_shot_and_valid(self):
+        tc = generate_test_case(4, n_gpus=8)
+        state = tc.initial.clone()
+        used_before = len(state.used_gpus())
+        fabric_frag_aware_compact(state)
+        state.validate()
+        assert len(state.used_gpus()) <= used_before
+        # every workload still placed exactly once
+        placed = [p.wid for g in state.gpus.values() for p in g.placements]
+        assert sorted(placed) == sorted(
+            p.wid for g in tc.initial.gpus.values() for p in g.placements
+        )
+
+    def test_reconfigure_places_everything(self):
+        tc = generate_test_case(6, n_gpus=8)
+        state = tc.initial.clone()
+        pending = fabric_frag_aware_reconfigure(state)
+        state.validate()
+        assert pending == []
+        placed = {p.wid for g in state.gpus.values() for p in g.placements}
+        assert placed == {
+            p.wid for g in tc.initial.gpus.values() for p in g.placements
+        }
+
+    @pytest.mark.parametrize("seed", range(8))
+    def test_reconfigure_never_evicts(self, seed):
+        """Dense random-index layouts the greedy re-pack can't always match:
+        reconfigure must keep the current layout rather than evict (the
+        Sec-4.2 heuristic's safety behavior)."""
+        rng = np.random.default_rng(seed)
+        state = ClusterState(
+            gpus={f"g{i}": GPUState(f"g{i}", A100_80GB) for i in range(4)}
+        )
+        wi = 0
+        for g in state.gpus.values():
+            for _ in range(8):
+                pid = int(rng.choice([5, 9, 14, 15, 19, 20]))
+                prof = A100_80GB.profile(pid)
+                feas = [i for i in prof.allowed_indexes if g.can_place_at(prof, i)]
+                if not feas:
+                    continue
+                idx = int(rng.choice(feas))  # random, not preference order
+                w = Workload(wid=f"p{wi}", profile_id=pid)
+                wi += 1
+                state.add_workload(w)
+                g.place(w.wid, pid, idx)
+        before = {p.wid for g in state.gpus.values() for p in g.placements}
+        assert fabric_frag_aware_reconfigure(state) == []
+        state.validate()
+        after = {p.wid for g in state.gpus.values() for p in g.placements}
+        assert after == before
+
+    def test_engine_verbs(self):
+        tc = generate_test_case(2, n_gpus=8)
+        state = tc.initial.clone()
+        eng = PlacementEngine("frag_aware")
+        eng.deploy(state, tc.new_workloads)
+        state.validate()
+        eng.compact(state)
+        state.validate()
+        eng.reconfigure(state)
+        state.validate()
+
+
+class TestPersistentMirror:
+    """fleet_fabric(): one mirror per ClusterState, row-synced across calls."""
+
+    def test_reused_and_synced_after_external_mutation(self):
+        from repro.core.fabric import fleet_fabric
+
+        tc = generate_test_case(1, n_gpus=8)
+        state = tc.initial
+        fab1 = fleet_fabric(state)
+        fab1.feasible_all()
+        # external mutation the mirror has not seen: direct GPUState removal
+        gid, pl = next(
+            (g.gid, g.placements[0]) for g in state.used_gpus()
+        )
+        state.gpus[gid].remove(pl.wid)
+        fab2 = fleet_fabric(state)
+        assert fab2 is fab1  # reused, not rebuilt
+        np.testing.assert_array_equal(
+            fab2.feasible_all(), FleetFabric(state).feasible_all()
+        )
+
+    def test_wholesale_gpu_replacement_resyncs(self):
+        from repro.core.fabric import fleet_fabric
+
+        tc = generate_test_case(2, n_gpus=6)
+        state = tc.initial
+        fleet_fabric(state).feasible_all()
+        snapshot = state.clone()
+        # mutate, then roll back by replacing the gpus dict with the clones
+        # (what OnlineSimulator's migration-budget rollback does)
+        gid = state.used_gpus()[0].gid
+        state.gpus[gid].remove(state.gpus[gid].placements[0].wid)
+        state.gpus = snapshot.gpus
+        fab = fleet_fabric(state)
+        np.testing.assert_array_equal(
+            fab.feasible_all(), FleetFabric(state).feasible_all()
+        )
+
+    def test_engine_deploys_share_one_mirror_across_calls(self):
+        tc = generate_test_case(3, n_gpus=8)
+        s_scalar, s_fab = tc.initial.clone(), tc.initial.clone()
+        eng_off = PlacementEngine("rule_based", fabric="off")
+        eng_on = PlacementEngine("rule_based", fabric="on")
+        news = list(tc.new_workloads)
+        # deploy one-by-one (the online arrival pattern), with a direct
+        # departure in between that only the state sees
+        for i, w in enumerate(news[:6]):
+            eng_off.deploy(s_scalar, [w])
+            eng_on.deploy(s_fab, [w])
+            if i == 2:
+                for st in (s_scalar, s_fab):
+                    victim = st.used_gpus()[0].placements[0].wid
+                    st.remove(victim)
+        assert _placements(s_scalar) == _placements(s_fab)
+
+
+def test_empty_fleet_parity():
+    """0-GPU cluster: fabric paths pend everything, like the scalar paths."""
+    w = Workload(wid="w0", profile_id=9)
+    for fn in (fabric_first_fit, fabric_load_balanced, fabric_initial_deployment,
+               fabric_frag_aware_deploy):
+        state = ClusterState()
+        pending = fn(state, [w])
+        assert [p.wid for p in pending] == ["w0"]
+        assert "w0" in state.workloads
+    fabric_frag_aware_compact(ClusterState())
+    assert fabric_frag_aware_reconfigure(ClusterState()) == []
+
+
+# ---------------------------------------------------------------------------
+# randomized property: parity under arrival/departure churn
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("seed", SEEDS[:3])
+def test_churn_parity(seed):
+    """Interleaved random placements/removals keep the mirror exact."""
+    rng = np.random.default_rng(seed)
+    state = _random_hetero_state(seed + 100)
+    fab = FleetFabric(state)
+    fab.feasible_all()
+    live = []
+    wi = 0
+    for step in range(60):
+        if live and rng.random() < 0.4:
+            wid, gid, pid, idx = live.pop(int(rng.integers(len(live))))
+            state.remove(wid, gid)
+            fab.unapply(gid, state.gpus[gid].device.profile(pid), idx)
+        else:
+            gid = fab.gids[int(rng.integers(len(fab.gids)))]
+            device = state.gpus[gid].device
+            pid = int(rng.choice([p.profile_id for p in device.profiles]))
+            spot = fab.pick_first_fit(pid, device.name)
+            if spot is None:
+                continue
+            sgid, idx = spot
+            w = Workload(wid=f"c{wi}", profile_id=pid, device_kind=device.name)
+            wi += 1
+            state.add_workload(w)
+            state.place(w.wid, sgid, idx)
+            fab.apply(sgid, device.profile(pid), idx)
+            live.append((w.wid, sgid, pid, idx))
+    np.testing.assert_array_equal(
+        fab.feasible_all(), FleetFabric(state).feasible_all()
+    )
+    state.validate()

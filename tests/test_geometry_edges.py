@@ -1,0 +1,151 @@
+"""Device-geometry edge cases (paper Table 1, Sec 3.2).
+
+Covers the corners the random pools deliberately skip: the H100 device
+model, TPU pod-partition preference orders, m7 stranding semantics for
+``1g.10gb`` at index 6, and the ``+me`` media-extension profile 20.
+"""
+from repro.core.fabric import FleetFabric
+from repro.core.profiles import A100_80GB, H100_96GB
+from repro.core.simulator import _DEFAULT_PROFILE_POOL
+from repro.core.state import ClusterState, GPUState, Workload
+from repro.core.tpu_profiles import TPU_V5E_POD, profile_for_chips
+
+
+# ---------------------------------------------------------------------------
+# H100_96GB: same slice geometry as A100, 12 GB memory slices
+# ---------------------------------------------------------------------------
+class TestH100:
+    def test_profile_names_scale_with_memory(self):
+        by_id = {p.profile_id: p.name for p in H100_96GB.profiles}
+        assert by_id[0] == "7g.96gb"
+        assert by_id[9] == "3g.48gb"
+        assert by_id[19] == "1g.12gb"
+        assert by_id[20] == "1g.12gb+me"
+        assert H100_96GB.total_memory_gb == 96
+
+    def test_preference_orders_match_table1(self):
+        """H100 keeps the A100 Table-1 allowed-index preference orders."""
+        for a, h in zip(A100_80GB.profiles, H100_96GB.profiles):
+            assert a.profile_id == h.profile_id
+            assert a.allowed_indexes == h.allowed_indexes
+            assert a.compute_slices == h.compute_slices
+            assert a.memory_slices == h.memory_slices
+
+    def test_preferred_index_placement(self):
+        gpu = GPUState("h", H100_96GB)
+        # 3g.48gb prefers index 4 (captures m7), falls back to 0.
+        assert gpu.first_feasible_index(H100_96GB.profile(9)) == 4
+        gpu.place("a", 9, 4)
+        assert gpu.first_feasible_index(H100_96GB.profile(9)) == 0
+        gpu.place("b", 9, 0)
+        assert gpu.memory_waste() == 0
+        assert gpu.compute_waste() == 1  # the index-0 copy blocks 4 slices
+
+
+# ---------------------------------------------------------------------------
+# TPU pod partitions: aligned starts, descending preference
+# ---------------------------------------------------------------------------
+class TestTPUProfiles:
+    def test_aligned_descending_preference(self):
+        by_id = {p.profile_id: p for p in TPU_V5E_POD.profiles}
+        assert by_id[1].allowed_indexes == (8, 0)
+        assert by_id[2].allowed_indexes == (12, 8, 4, 0)
+        assert by_id[3].allowed_indexes == (14, 12, 10, 8, 6, 4, 2, 0)
+        assert by_id[4].allowed_indexes == tuple(range(15, -1, -1))
+
+    def test_buddy_discipline_keeps_low_rows_contiguous(self):
+        """Descending preference leaves room for a later full-pod block."""
+        gpu = GPUState("t", TPU_V5E_POD)
+        gpu.place("a", 3, gpu.first_feasible_index(TPU_V5E_POD.profile(3)))
+        gpu.place("b", 2, gpu.first_feasible_index(TPU_V5E_POD.profile(2)))
+        # 2-row at 14, 4-row at 8 -> rows 0..7 still contiguous for an 8-row.
+        assert gpu.first_feasible_index(TPU_V5E_POD.profile(1)) == 0
+
+    def test_unaligned_start_rejected(self):
+        gpu = GPUState("t", TPU_V5E_POD)
+        assert not gpu.can_place_at(TPU_V5E_POD.profile(2), 2)  # 4-row at 2
+        assert gpu.can_place_at(TPU_V5E_POD.profile(2), 4)
+
+    def test_no_extra_memory_no_media(self):
+        assert TPU_V5E_POD.extra_memory is False
+        assert TPU_V5E_POD.max_media_extensions == 0
+        gpu = GPUState("t", TPU_V5E_POD)
+        gpu.place("a", 0, 0)
+        assert gpu.memory_waste() == 0
+
+    def test_profile_for_chips_rounds_up(self):
+        one_row = 256 * (1 << 30)
+        assert profile_for_chips(one_row).profile_id == 4
+        assert profile_for_chips(one_row + 1).profile_id == 3
+        assert profile_for_chips(17 * one_row).profile_id == 0  # full pod
+
+
+# ---------------------------------------------------------------------------
+# m7 stranding (paper 3.2.3 / Table 3 note)
+# ---------------------------------------------------------------------------
+class TestM7Stranding:
+    def test_1g10gb_at_index6_strands_m7(self):
+        gpu = GPUState("g", A100_80GB)
+        gpu.place("a", 19, 6)  # covers memory {6} only
+        assert gpu.memory_waste() == 1
+        # ... until something claims m7 via a 2-memory-slice profile? m7 is
+        # only reachable through slice 6, which is taken -> permanently
+        # stranded while this placement lives.
+        assert gpu.can_place_at(A100_80GB.profile(19), 7) is False
+
+    def test_1g20gb_at_index6_captures_m7(self):
+        gpu = GPUState("g", A100_80GB)
+        gpu.place("a", 15, 6)  # covers memory {6, 7}
+        assert gpu.memory_waste() == 0
+        assert gpu.used_memory_slices() == 2
+
+    def test_fabric_scores_m7_stranding(self):
+        """The fabric's waste_delta sees the stranding penalty at index 6."""
+        state = ClusterState(gpus={"g": GPUState("g", A100_80GB)})
+        fab = FleetFabric(state)
+        waste, _ = fab.scores_profile(19)
+        # profile 19 at 6: strands m7 -> waste 1; at 0..5 it wastes nothing.
+        assert int(waste[0, 6]) == 1
+        assert all(int(waste[0, i]) == 0 for i in range(6))
+
+
+# ---------------------------------------------------------------------------
+# the +me profile 20 (excluded from random pools; third packing dimension)
+# ---------------------------------------------------------------------------
+class TestMediaExtensionProfile:
+    def test_excluded_from_random_pools(self):
+        from repro.core.events import _ARRIVAL_POOLS
+
+        assert 20 not in _DEFAULT_PROFILE_POOL
+        for pool in _ARRIVAL_POOLS.values():
+            assert 20 not in pool
+
+    def test_one_me_per_gpu(self):
+        gpu = GPUState("g", A100_80GB)
+        prof20 = A100_80GB.profile(20)
+        gpu.place("a", 20, 6)
+        assert gpu.media_extensions_used() == 1
+        # plenty of free slices, but the ME budget is exhausted
+        assert gpu.first_feasible_index(prof20) is None
+        # the plain 1g.10gb twin still fits everywhere free
+        assert gpu.first_feasible_index(A100_80GB.profile(19)) == 4
+
+    def test_fabric_honors_me_budget(self):
+        state = ClusterState(gpus={"g": GPUState("g", A100_80GB)})
+        state.add_workload(Workload(wid="a", profile_id=20))
+        state.gpus["g"].place("a", 20, 6)
+        fab = FleetFabric(state)
+        assert not fab.feasible_profile(20).any()
+        assert fab.feasible_profile(19).any()
+
+    def test_deploy_me_workloads_spread_across_gpus(self):
+        state = ClusterState(
+            gpus={f"g{i}": GPUState(f"g{i}", A100_80GB) for i in range(3)}
+        )
+        from repro.core.engine import PlacementEngine
+
+        news = [Workload(wid=f"me{i}", profile_id=20) for i in range(4)]
+        res = PlacementEngine("rule_based").deploy(state, news)
+        # one ME per GPU: 3 placed, 1 pending
+        assert len(res.pending) == 1
+        assert all(g.media_extensions_used() <= 1 for g in state.gpus.values())

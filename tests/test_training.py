@@ -89,9 +89,8 @@ def test_int8_optimizer_still_learns():
     step_fn = jax.jit(make_train_step(mb, ocfg, TrainConfig()))
     _, _, losses = _run(params, state, step_fn, dcfg, 30)
     assert np.mean(losses[-5:]) < np.mean(losses[:5]) * 0.98  # quantized moments learn (slower)
-    # int8 state is actually int8
-    leaf = jax.tree.leaves(state["m"])[0]
-    # after jit steps the structure is {"q": int8, "scale": f32}
+    # int8 state is actually int8: after jit steps the structure is
+    # {"q": int8, "scale": f32}
     flat, _ = jax.tree_util.tree_flatten_with_path(state["m"])
     assert any(np.asarray(l).dtype == np.int8 for _, l in flat)
 

@@ -1,5 +1,4 @@
 """WPM MIP, pattern solver, B&B fallback, and migration-planner tests."""
-import numpy as np
 import pytest
 
 from repro.core import metrics
@@ -7,7 +6,7 @@ from repro.core.migration import plan_migration
 from repro.core.patterns import pattern_catalog, reconfigure_patterns
 from repro.core.profiles import A100_80GB
 from repro.core.simulator import generate_test_case
-from repro.core.state import ClusterState, GPUState, Workload
+from repro.core.state import ClusterState, Workload
 from repro.core import wpm_mip
 from repro.core.wpm_mip import solve_wpm
 
