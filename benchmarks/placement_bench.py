@@ -139,18 +139,21 @@ def print_table(case: str, n_gpus: int, table: Dict[str, Dict[str, float]]) -> N
 # ---------------------------------------------------------------------------
 # online trace mode (--trace)
 # ---------------------------------------------------------------------------
-#: TraceStats field -> short column label
+#: TraceStats field -> short column label (migration-cost columns included)
 _TRACE_COLS = {
     "time_avg_gpus_used": "avg_gpus",
     "time_avg_compute_waste": "avg_cwaste",
-    "time_avg_memory_waste": "avg_mwaste",
     "time_avg_mem_occupancy": "avg_mem_occ",
     "peak_gpus_used": "peak_gpus",
     "n_placed": "placed",
     "n_rejected": "rejected",
     "n_migrations": "migrations",
     "n_compactions": "compactions",
-    "n_compactions_skipped": "skipped",
+    "n_plans_rejected": "plans_rej",
+    "n_deferred": "deferred",  # compactions + reconfigures inside a window
+    "gib_moved": "gib_moved",
+    "disruption_minutes": "disrupt_min",
+    "migration_window_seconds": "migr_win_s",
     "engine_seconds": "engine_s",
 }
 
@@ -166,35 +169,52 @@ def run_trace(
     compact_every: Optional[float],
     migration_budget: Optional[int],
     time_limit: float,
+    commit_modes: Sequence[str] = ("always",),
+    reconfigure_every: Optional[float] = None,
 ) -> Dict[str, Dict[str, float]]:
+    """Each policy x commit mode over the same seeded trace.
+
+    Rows are keyed ``policy`` when one commit mode is given, else
+    ``policy@mode`` — the side-by-side view behind the control plane's
+    headline: net-positive cuts disruption-minutes at equal GPUs-used.
+    """
     spec = [(A100_80GB, n_a100)]
     if n_tpu_pods:
         spec.append((TPU_V5E_POD, n_tpu_pods))
     out: Dict[str, Dict[str, float]] = {}
     for policy in policies:
-        fleet = build_fleet(spec)
-        trace = generate_trace(
-            seed, fleet, horizon=horizon, arrival_rate=arrival_rate,
-            mean_lifetime=mean_lifetime,
-        )
-        sim = OnlineSimulator(
-            fleet,
-            PlacementEngine(policy, time_limit=time_limit),
-            compact_every=compact_every,
-            migration_budget=migration_budget,
-        )
-        stats = sim.run(trace)
-        fleet.validate()
-        out[policy] = {k: float(getattr(stats, k)) for k in _TRACE_COLS}
+        for commit in commit_modes:
+            fleet = build_fleet(spec)
+            trace = generate_trace(
+                seed, fleet, horizon=horizon, arrival_rate=arrival_rate,
+                mean_lifetime=mean_lifetime,
+            )
+            sim = OnlineSimulator(
+                fleet,
+                PlacementEngine(policy, time_limit=time_limit, commit=commit),
+                compact_every=compact_every,
+                migration_budget=migration_budget,
+                reconfigure_every=reconfigure_every,
+            )
+            stats = sim.run(trace)
+            fleet.validate()
+            d = stats.as_dict()
+            d["gib_moved"] = stats.bytes_moved / 2**30
+            d["n_deferred"] = (
+                stats.n_compactions_deferred + stats.n_reconfigures_deferred
+            )
+            key = policy if len(commit_modes) == 1 else f"{policy}@{commit}"
+            out[key] = {k: float(d[k]) for k in _TRACE_COLS}
     return out
 
 
 def print_trace_table(table: Dict[str, Dict[str, float]], header: str) -> None:
     print(f"\n== online trace: {header} ==")
     cols = list(next(iter(table.values())).keys())
-    print("policy".ljust(15) + "".join(_TRACE_COLS[c].rjust(13) for c in cols))
+    width = max(24, max(len(a) for a in table) + 2)
+    print("policy".ljust(width) + "".join(_TRACE_COLS[c].rjust(13) for c in cols))
     for a, row in table.items():
-        print(a.ljust(15) + "".join(f"{row[c]:13.3f}" for c in cols))
+        print(a.ljust(width) + "".join(f"{row[c]:13.3f}" for c in cols))
 
 
 # ---------------------------------------------------------------------------
@@ -315,6 +335,13 @@ def main() -> None:
     ap.add_argument("--mean-lifetime", type=float, default=40.0)
     ap.add_argument("--compact-every", type=float, default=25.0)
     ap.add_argument("--migration-budget", type=int, default=None)
+    ap.add_argument("--commit", nargs="+", default=["always"],
+                    choices=["always", "net-positive", "budgeted"],
+                    help="CommitPolicy mode(s); several = side-by-side rows "
+                    "per policy (plan/score/commit control plane)")
+    ap.add_argument("--reconfigure-every", type=float, default=None,
+                    help="periodic maintenance repack (Sec 2.3.3) in the "
+                    "online trace; the verb the CommitPolicy keeps honest")
     # fleet-scale mode
     ap.add_argument("--fleet-scale", type=int, nargs="+", default=None,
                     metavar="N", help="fleet sizes for the fabric-vs-scalar "
@@ -346,6 +373,8 @@ def main() -> None:
             args.arrival_rate, args.mean_lifetime,
             args.compact_every if args.compact_every > 0 else None,
             args.migration_budget, args.time_limit,
+            commit_modes=args.commit,
+            reconfigure_every=args.reconfigure_every,
         )
         print_trace_table(
             table,

@@ -1,11 +1,13 @@
-"""Paper Figures 4 & 5 walked through: a fragmented 3-GPU node is compacted
-(one GPU vacated), then reconfigured (wastage eliminated as well), with the
-migration plan printed for each step.
+"""Paper Figures 4 & 5 walked through on the migration control plane: a
+fragmented 3-GPU node is compacted (one GPU vacated), then reconfigured
+(wastage eliminated as well) — each verb returning a *scored* MigrationPlan
+(bytes to transfer, downtime, migration-window makespans) and a commit
+decision, instead of mutating blindly.
 
     PYTHONPATH=src python examples/compaction_demo.py
 """
-from repro.core import heuristic, metrics
-from repro.core.migration import plan_migration
+from repro.core import metrics
+from repro.core.engine import CommitPolicy, PlacementEngine
 from repro.core.state import ClusterState, Workload
 
 
@@ -24,6 +26,20 @@ def report(tag: str, state: ClusterState, initial=None) -> None:
           f"memWaste={m.memory_wastage} cUtil={m.compute_utilization:.0%} "
           f"mUtil={m.memory_utilization:.0%}")
     draw(state)
+
+
+def describe_plan(tag: str, res) -> None:
+    plan, cost = res.plan, res.cost
+    print(f"\n{tag} plan: {plan.n_moves} moves ({plan.n_sequential} sequential, "
+          f"{len(plan.disruptive)} disruptive), waves={[len(w) for w in plan.waves]}")
+    print(f"  cost: {cost.total_bytes / 2**30:.0f} GiB to move, "
+          f"downtime {cost.downtime_seconds:.1f}s, "
+          f"window {cost.duration_seconds:.1f}s "
+          f"(makespans {[round(s, 2) for s in cost.wave_makespans]})")
+    print(f"  gains: {res.gains.gpus_saved} GPU(s) saved, "
+          f"{res.gains.waste_saved} wastage slice(s) removed")
+    print(f"  decision [{res.decision.reason}] -> "
+          f"{'COMMIT' if res.committed else 'REJECT'}")
 
 
 def build_fig4_state() -> ClusterState:
@@ -49,28 +65,40 @@ def build_fig4_state() -> ClusterState:
 def main() -> None:
     initial = build_fig4_state()
     report("initial   ", initial)
+    engine = PlacementEngine("rule_based")
 
     # --- compaction (Fig. 4): vacate underutilized GPUs, one-shot moves only
     compacted = initial.clone()
-    heuristic.compaction(compacted)
-    plan = plan_migration(initial, compacted)
-    print(f"\ncompaction plan: {plan.n_moves} moves, "
-          f"{plan.n_sequential} sequential, waves={[len(w) for w in plan.waves]}")
+    res_c = engine.compact(compacted)
+    describe_plan("compaction", res_c)
     report("compacted ", compacted, initial)
 
     # --- reconfiguration (Fig. 5): re-place everything, kill the wastage too
     reconfigured = initial.clone()
-    heuristic.reconfiguration(reconfigured)
-    plan = plan_migration(initial, reconfigured)
-    print(f"\nreconfiguration plan: {plan.n_moves} moves, "
-          f"{plan.n_sequential} sequential")
+    res_r = engine.reconfigure(reconfigured)
+    describe_plan("reconfiguration", res_r)
     report("reconfig  ", reconfigured, initial)
+
+    # --- the control plane at work: a net-positive engine rejects a repack
+    # whose disruption outweighs its gains (state stays byte-identical).
+    frugal = PlacementEngine(
+        "rule_based",
+        commit=CommitPolicy(mode="net-positive", gpu_seconds_value=0.5,
+                            waste_seconds_value=0.1),
+    )
+    guarded = initial.clone()
+    res_g = frugal.reconfigure(guarded)
+    describe_plan("guarded reconfiguration", res_g)
 
     mc = metrics.evaluate(compacted, initial)
     mr = metrics.evaluate(reconfigured, initial)
+    assert res_c.committed and res_r.committed
     assert mc.n_gpus <= 2, "compaction should vacate a GPU"
     assert mr.compute_wastage <= mc.compute_wastage
-    print("\nOK: compaction saved a GPU; reconfiguration also removed wastage")
+    assert not res_g.committed, "undervalued gains must be rejected"
+    assert metrics.evaluate(guarded).n_gpus == metrics.evaluate(initial).n_gpus
+    print("\nOK: compaction saved a GPU; reconfiguration also removed wastage; "
+          "the net-positive policy rejected the undervalued repack")
 
 
 if __name__ == "__main__":

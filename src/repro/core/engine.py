@@ -28,14 +28,35 @@ load_balanced / rule_based deploys on fleets of >= ``FABRIC_AUTO_MIN_GPUS``
 GPUs use the JAX-batched feasibility kernels — placement-identical to the
 scalar path, an order of magnitude faster at 1024+ GPUs.  The ``frag_aware``
 policy (fragmentation-aware scoring per Ting et al.) is fabric-native.
+
+Plan / score / commit
+---------------------
+``compact`` and ``reconfigure`` no longer mutate blindly: the policy runs
+inside a ``ClusterState.transaction()``, the resulting diff is derived as a
+``MigrationPlan``, priced by a ``MigrationCostModel`` (bytes to transfer,
+downtime seconds, SLO disruption), and committed only if the configured
+``CommitPolicy`` says the gains (GPUs saved, wastage removed) justify the
+disruption — otherwise the transaction rolls back in O(ops), no clone-and-
+restore.  The scored plan, the gains, and the decision ride back on the
+``EngineResult`` either way.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Dict, List, Optional, Sequence, Tuple, Type
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Type, Union
 
 from . import baselines, heuristic
+from .migration import (
+    BytesFor,
+    CommitDecision,
+    CommitPolicy,
+    MigrationCostModel,
+    MigrationPlan,
+    PlanCost,
+    PlanGains,
+    plan_migration,
+)
 from .state import ClusterState, Workload
 
 __all__ = [
@@ -45,6 +66,8 @@ __all__ = [
     "get_policy",
     "available_policies",
     "POLICIES",
+    "CommitPolicy",
+    "MigrationCostModel",
 ]
 
 VERBS = ("deploy", "compact", "reconfigure")
@@ -58,6 +81,19 @@ class EngineResult:
     verb: str
     pending: List[Workload]
     seconds: float
+    #: scored migration plan (compact/reconfigure always; deploy only when
+    #: the engine was built with ``plan_deploys=True``).
+    plan: Optional[MigrationPlan] = None
+    cost: Optional[PlanCost] = None
+    gains: Optional[PlanGains] = None
+    decision: Optional[CommitDecision] = None
+    #: False when the CommitPolicy rejected the plan and the state was
+    #: rolled back to its pre-verb layout.
+    committed: bool = True
+    #: the pre-verb snapshot the plan was derived against (set whenever a
+    #: plan is) — callers needing before/after metrics reuse it instead of
+    #: cloning the fleet a second time.
+    baseline: Optional[ClusterState] = None
 
 
 # ---------------------------------------------------------------------------
@@ -258,10 +294,9 @@ class FragAwarePolicy(PlacementPolicy):
 # WPM MIP (Sec 4.1)
 # ---------------------------------------------------------------------------
 def _adopt(state: ClusterState, solved: ClusterState) -> None:
-    """Copy a solver-produced layout into ``state`` in place."""
-    for gid, gpu in solved.gpus.items():
-        state.gpus[gid] = gpu
-    state.workloads.update(solved.workloads)
+    """Land a solver-produced layout in ``state`` via the journaled
+    diff-apply (no GPUState swaps — engine transactions can undo it)."""
+    state.adopt(solved)
 
 
 class MIPPolicy(PlacementPolicy):
@@ -391,8 +426,20 @@ class PlacementEngine:
         policy: str = "rule_based",
         time_limit: float = 30.0,
         fabric: str = "auto",
+        commit: Union[str, CommitPolicy] = "always",
+        cost_model: Optional[MigrationCostModel] = None,
+        plan_deploys: bool = False,
     ):
         self.policy = get_policy(policy, time_limit, fabric)
+        self.commit_policy = (
+            commit if isinstance(commit, CommitPolicy) else CommitPolicy(mode=commit)
+        )
+        self.cost_model = cost_model or MigrationCostModel()
+        #: optional wid -> live bytes hook (serving layer: weights + KV).
+        self.bytes_for: Optional[BytesFor] = None
+        #: derive scored plans for deploys too (off by default: the clone +
+        #: diff walk is pure overhead on the fleet-scale arrival hot path).
+        self.plan_deploys = plan_deploys
 
     @property
     def policy_name(self) -> str:
@@ -430,6 +477,10 @@ class PlacementEngine:
             for gid in key:
                 sub.gpus[gid] = state.gpus[gid]
             sub.workloads = state.workloads
+        # Ops performed through the view journal into the parent's open
+        # transaction (shared GPUState objects / workload dict make them
+        # undoable from the parent) — the commit-gating rollback path.
+        sub.link_journal_parent(state)
         return sub
 
     def _route(
@@ -480,6 +531,25 @@ class PlacementEngine:
                 pending.extend(out)
         return pending
 
+    # -- plan scoring ------------------------------------------------------
+    @staticmethod
+    def _wastage(state: ClusterState) -> int:
+        return sum(
+            g.compute_waste() + g.memory_waste() for g in state.used_gpus()
+        )
+
+    def _score(
+        self, before: ClusterState, state: ClusterState
+    ) -> Tuple[MigrationPlan, PlanCost, PlanGains, CommitDecision]:
+        plan = plan_migration(before, state)
+        cost = self.cost_model.price(plan, state, bytes_for=self.bytes_for)
+        plan.cost = cost
+        gains = PlanGains(
+            gpus_saved=len(before.used_gpus()) - len(state.used_gpus()),
+            waste_saved=self._wastage(before) - self._wastage(state),
+        )
+        return plan, cost, gains, self.commit_policy.decide(gains, cost)
+
     # -- verbs -------------------------------------------------------------
     def deploy(
         self, state: ClusterState, new_workloads: Sequence[Workload]
@@ -499,22 +569,55 @@ class PlacementEngine:
                 return []  # don't wake solver policies for untouched groups
             return self.policy.deploy(sub, routed[kind])
 
+        before = state.clone() if self.plan_deploys else None
         pending = self._per_group(state, _deploy_group)
-        return EngineResult(self.policy.name, "deploy", pending, time.time() - t0)
+        res = EngineResult(self.policy.name, "deploy", pending, time.time() - t0)
+        if before is not None:
+            # Deploys are admissions, not optimizations: score the plan (new
+            # placements are wave-0 moves; joint policies may also relocate
+            # existing replicas) but never gate the commit on it.
+            res.plan, res.cost, res.gains, res.decision = self._score(before, state)
+            res.baseline = before
+        return res
 
     def compact(self, state: ClusterState) -> EngineResult:
-        self._check("compact")
-        t0 = time.time()
-        self._per_group(state, lambda sub, kind: self.policy.compact(sub))
-        return EngineResult(self.policy.name, "compact", [], time.time() - t0)
+        return self._gated_verb(state, "compact", lambda sub: self.policy.compact(sub))
 
     def reconfigure(self, state: ClusterState) -> EngineResult:
-        self._check("reconfigure")
-        t0 = time.time()
-        pending = self._per_group(
-            state, lambda sub, kind: self.policy.reconfigure(sub)
+        return self._gated_verb(
+            state, "reconfigure", lambda sub: self.policy.reconfigure(sub)
         )
-        return EngineResult(self.policy.name, "reconfigure", pending, time.time() - t0)
+
+    def _gated_verb(self, state: ClusterState, verb: str, fn) -> EngineResult:
+        """Run a mutating verb as plan -> score -> commit.
+
+        The policy mutates inside a transaction (sub-view ops journal to it
+        via the parent link); the resulting diff is priced and the
+        CommitPolicy decides.  Rejection is a journal rollback — placement
+        lists, occupancy caches, and GPUState identities all restored.
+        """
+        self._check(verb)
+        t0 = time.time()
+        before = state.clone()  # plan baseline (placement lists only)
+        pending: List[Workload] = []
+        with state.transaction() as txn:
+            pending = self._per_group(state, lambda sub, kind: fn(sub)) or []
+            plan, cost, gains, decision = self._score(before, state)
+            if not decision.commit:
+                txn.rollback()
+                pending = []  # layout kept: nothing was evicted
+        return EngineResult(
+            self.policy.name,
+            verb,
+            pending,
+            time.time() - t0,
+            plan=plan,
+            cost=cost,
+            gains=gains,
+            decision=decision,
+            committed=decision.commit,
+            baseline=before,
+        )
 
     def _check(self, verb: str) -> None:
         if verb not in self.policy.supports:

@@ -11,14 +11,21 @@ any ``PlacementEngine`` policy:
   * ``generate_trace`` — seeded Poisson arrivals with exponential lifetimes
                          and occasional bursts, routed across device kinds
                          in proportion to fleet capacity
-  * ``OnlineSimulator``— replays a trace through an engine, enforcing an
-                         optional per-compaction migration budget (over
-                         budget -> the compaction is rolled back), and
-                         integrates time-averaged fleet metrics
+  * ``OnlineSimulator``— replays a trace through an engine and integrates
+                         time-averaged fleet metrics.  Compactions run
+                         through the engine's plan/score/commit control
+                         plane: a rejected plan is a transactional rollback
+                         (no clone-and-restore), a committed plan opens a
+                         *migration window* over simulated time — its
+                         wave-parallel copies and disruptive drains occupy
+                         ``duration_seconds``, during which further
+                         compaction triggers are deferred — and its bytes
+                         moved / downtime accrue into ``TraceStats``.
 
 Time-averaged metrics follow the ROADMAP's scale axis: what matters online
 is not one snapshot's GPU count but the integral of GPUs-used (energy /
-cost) and wastage over the trace horizon.
+cost) and wastage over the trace horizon — now alongside the paper's real
+constraint, disruption-minutes spent migrating.
 """
 from __future__ import annotations
 
@@ -29,6 +36,7 @@ import numpy as np
 
 from .engine import PlacementEngine
 from .fleetgen import FleetSpec, build_fleet  # noqa: F401  (re-exported API)
+from .migration import CommitPolicy
 from .profiles import DeviceModel
 from .state import ClusterState, Workload
 
@@ -154,19 +162,24 @@ class TraceStats:
     n_departed: int = 0
     n_migrations: int = 0
     n_compactions: int = 0
-    n_compactions_skipped: int = 0  # migration budget exceeded
+    n_compactions_skipped: int = 0  # compaction plan rejected by CommitPolicy
+    n_compactions_deferred: int = 0  # trigger fell inside a migration window
+    n_reconfigures: int = 0
+    n_reconfigures_deferred: int = 0
+    n_plans_rejected: int = 0  # all rejected plans (compact + reconfigure)
+    bytes_moved: float = 0.0
+    disruption_seconds: float = 0.0  # summed per-replica unavailability
+    migration_window_seconds: float = 0.0  # wall-clock spent migrating
     engine_seconds: float = 0.0
 
+    @property
+    def disruption_minutes(self) -> float:
+        return self.disruption_seconds / 60.0
+
     def as_dict(self) -> Dict[str, float]:
-        return dataclasses.asdict(self)
-
-
-def _placement_map(state: ClusterState) -> Dict[str, Tuple[str, int]]:
-    return {
-        p.wid: (gid, p.index)
-        for gid, g in state.gpus.items()
-        for p in g.placements
-    }
+        d = dataclasses.asdict(self)
+        d["disruption_minutes"] = self.disruption_minutes
+        return d
 
 
 class OnlineSimulator:
@@ -178,13 +191,33 @@ class OnlineSimulator:
         engine: PlacementEngine,
         compact_every: Optional[float] = None,
         migration_budget: Optional[int] = None,
+        reconfigure_every: Optional[float] = None,
     ):
         self.state = state
         self.engine = engine
         self.compact_every = compact_every
-        #: max migrations allowed per compaction; an over-budget compaction
-        #: is rolled back wholesale (the cluster keeps its layout).
+        #: periodic maintenance repack (paper Sec 2.3.3) — the expensive
+        #: verb the CommitPolicy exists to keep honest online.
+        self.reconfigure_every = reconfigure_every
+        #: max migrations allowed per compaction (legacy knob) — folded into
+        #: a simulator-local CommitPolicy override (applied only around this
+        #: simulator's verb calls, never mutating the shared engine), so an
+        #: over-budget plan is a transactional rollback, not clone-and-restore.
         self.migration_budget = migration_budget
+        self._commit_override: Optional[CommitPolicy] = None
+        if migration_budget is not None:
+            cp = engine.commit_policy
+            if cp.mode == "always":
+                cp = CommitPolicy(
+                    mode="budgeted",
+                    move_budget=migration_budget,
+                    downtime_budget_seconds=None,
+                )
+            else:
+                cp = dataclasses.replace(cp, move_budget=migration_budget)
+            self._commit_override = cp
+        #: end of the currently-open migration window (simulated clock).
+        self._busy_until = 0.0
 
     # -- metric integration over time --------------------------------------
     def _sample(self) -> Tuple[int, int, int, float]:
@@ -196,18 +229,35 @@ class OnlineSimulator:
         return len(used), cmp_waste, mem_waste, used_mem / max(total_mem, 1)
 
     def _events_with_compactions(self, trace: Trace):
-        if not self.compact_every:
+        """Merge the trace with periodic compact/reconfigure triggers."""
+        periodic = [
+            (period, kind)
+            for period, kind in (
+                (self.compact_every, "compact"),
+                (self.reconfigure_every, "reconfigure"),
+            )
+            if period
+        ]
+        if not periodic:
             yield from trace.events
             return
-        next_c = self.compact_every
+        pending = sorted((period, period, kind) for period, kind in periodic)
+
+        def _due(until: float):
+            while pending and pending[0][0] <= until:
+                t, period, kind = pending.pop(0)
+                yield Event(time=t, kind=kind)
+                nxt = (t + period, period, kind)
+                lo = 0
+                while lo < len(pending) and pending[lo][0] <= nxt[0]:
+                    lo += 1
+                pending.insert(lo, nxt)
+
         for ev in trace.events:
-            while next_c <= ev.time:
-                yield Event(time=next_c, kind="compact")
-                next_c += self.compact_every
+            yield from _due(ev.time)
             yield ev
-        while next_c < trace.horizon:
-            yield Event(time=next_c, kind="compact")
-            next_c += self.compact_every
+        while pending and pending[0][0] < trace.horizon:
+            yield from _due(pending[0][0])
 
     def run(self, trace: Trace) -> TraceStats:
         stats = TraceStats(
@@ -230,8 +280,8 @@ class OnlineSimulator:
                 self._handle_arrival(ev, stats)
             elif ev.kind == "departure":
                 self._handle_departure(ev, stats)
-            elif ev.kind == "compact":
-                self._handle_compact(stats)
+            elif ev.kind in ("compact", "reconfigure"):
+                self._handle_plan_verb(ev.kind, stats, ev.time)
             else:  # pragma: no cover
                 raise ValueError(f"unknown event kind {ev.kind!r}")
         sample = self._sample()
@@ -266,23 +316,44 @@ class OnlineSimulator:
                 stats.n_departed += 1
             self.state.workloads.pop(wid, None)
 
-    def _handle_compact(self, stats: TraceStats) -> None:
-        if "compact" not in self.engine.policy.supports:
+    def _handle_plan_verb(self, verb: str, stats: TraceStats, now: float) -> None:
+        if verb not in self.engine.policy.supports:
             return
-        before = _placement_map(self.state)
-        # Policies may replace GPUState objects wholesale (MIP adoption),
-        # which the op journal cannot undo — snapshot for budget rollback.
-        snapshot = self.state.clone() if self.migration_budget is not None else None
-        res = self.engine.compact(self.state)
+        if now < self._busy_until:
+            # A previous plan's waves/drains still occupy the fleet.
+            if verb == "compact":
+                stats.n_compactions_deferred += 1
+            else:
+                stats.n_reconfigures_deferred += 1
+            return
+        saved = self.engine.commit_policy
+        if self._commit_override is not None:
+            self.engine.commit_policy = self._commit_override
+        try:
+            res = getattr(self.engine, verb)(self.state)
+        finally:
+            self.engine.commit_policy = saved
         stats.engine_seconds += res.seconds
-        after = _placement_map(self.state)
-        moved = sum(
-            1 for wid, spot in after.items() if before.get(wid) != spot
-        )
-        if self.migration_budget is not None and moved > self.migration_budget:
-            self.state.gpus = snapshot.gpus
-            self.state.workloads = snapshot.workloads
-            stats.n_compactions_skipped += 1
+        if not res.committed:
+            # Plan rejected by the CommitPolicy -> transactional rollback
+            # already restored the layout; nothing moved.
+            if verb == "compact":
+                stats.n_compactions_skipped += 1
+            stats.n_plans_rejected += 1
             return
-        stats.n_compactions += 1
-        stats.n_migrations += moved
+        if verb == "compact":
+            stats.n_compactions += 1
+        else:
+            stats.n_reconfigures += 1
+        # Baseline reconfigure replays may fail to re-place a workload
+        # (measured Sec-5.2.3 behavior): it leaves the system, like a
+        # rejected arrival.
+        for w in res.pending:
+            self.state.workloads.pop(w.wid, None)
+            stats.n_rejected += 1
+        stats.n_migrations += res.plan.n_migrations if res.plan else 0
+        if res.cost is not None and res.cost.n_moves:
+            stats.bytes_moved += res.cost.total_bytes
+            stats.disruption_seconds += res.cost.downtime_seconds
+            stats.migration_window_seconds += res.cost.duration_seconds
+            self._busy_until = now + res.cost.duration_seconds

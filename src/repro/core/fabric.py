@@ -804,9 +804,10 @@ def replay_fresh_deploy(
     pending = deploy_fn(fresh, workloads)
     if pending and keep_on_pending:
         return []
-    for gid in state.gpus:
-        state.gpus[gid] = fresh.gpus[gid]
-    state.workloads.update(fresh.workloads)
+    # Journaled diff-apply: preserves GPUState identity (fabric mirrors and
+    # engine sub-views stay valid) and lets an engine-level transaction
+    # reject the whole re-pack.
+    state.adopt(fresh)
     return pending
 
 

@@ -174,12 +174,9 @@ def reconfiguration(state: ClusterState) -> List[Workload]:
         )
         pending = _reconfigure_into(fresh, device, workloads)
         if not pending:
-            # Commit: empty all old GPUs, adopt the fresh layout.
-            for gid in state.gpus:
-                if gid in fresh.gpus:
-                    state.gpus[gid] = fresh.gpus[gid]
-                else:
-                    state.gpus[gid] = GPUState(gid, state.gpus[gid].device)
+            # Commit: adopt the fresh layout (journaled diff-apply — GPUs
+            # outside ``targets`` are emptied by the removals it derives).
+            state.adopt(fresh)
             return []
     # Could not place everything even with all GPUs (shouldn't happen when
     # the initial state was feasible): keep initial layout.

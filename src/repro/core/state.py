@@ -329,11 +329,22 @@ class Transaction:
         self.closed = True
 
     def commit(self) -> None:
-        """Keep the mutations; splice ops into the parent txn if any."""
+        """Keep the mutations; splice ops into the parent txn if any.
+
+        A root transaction on a *linked* state (an engine sub-view, see
+        ``ClusterState.link_journal_parent``) forwards its ops to the parent
+        state's innermost open transaction, so an engine-level rollback can
+        undo policy work done through per-group views.
+        """
         if self.closed:
             return
         if self._parent is not None:
             self._parent._ops.extend(self._ops)
+        else:
+            parent_state = self._state.__dict__.get("_journal_parent")
+            if parent_state is not None:
+                for op in self._ops:
+                    parent_state._journal(op)
         self._ops.clear()
         self.closed = True
 
@@ -417,14 +428,32 @@ class ClusterState:
             if not txn.closed:
                 txn._record(op)
                 return
+        # No open txn here: forward to a linked parent state (engine
+        # sub-views share GPUState objects and the workload dict with their
+        # parent, so the parent's journal can undo these ops directly).
+        parent = self.__dict__.get("_journal_parent")
+        if parent is not None:
+            parent._journal(op)
+
+    def link_journal_parent(self, parent: Optional["ClusterState"]) -> None:
+        """Forward journal ops to ``parent`` when no local txn is open.
+
+        Used for engine sub-views: the view shares ``GPUState`` objects and
+        the workloads dict with ``parent``, so ops recorded on the view are
+        undoable through the parent's transactions.
+        """
+        self.__dict__["_journal_parent"] = parent
 
     def add_workload(self, w: Workload) -> None:
         self._journal(("add_wl", w.wid, self.workloads.get(w.wid)))
         self.workloads[w.wid] = w
 
-    def place(self, wid: str, gid: str, index: int) -> Placement:
-        w = self.workloads[wid]
-        pl = self.gpus[gid].place(wid, w.profile_id, index)
+    def place(
+        self, wid: str, gid: str, index: int, profile_id: Optional[int] = None
+    ) -> Placement:
+        if profile_id is None:
+            profile_id = self.workloads[wid].profile_id
+        pl = self.gpus[gid].place(wid, profile_id, index)
         self._journal(("place", gid, pl))
         return pl
 
@@ -441,6 +470,40 @@ class ClusterState:
         pl = gpu.remove(wid)
         self._journal(("remove", gid, pl, at))
         return pl
+
+    def adopt(self, layout: "ClusterState") -> None:
+        """Diff-apply ``layout``'s placements onto this state, journaled.
+
+        Solver policies (MIP, patterns, fresh-replay reconfigurations) build
+        their result in a scratch state; ``adopt`` lands it here through the
+        cluster-level mutators, so the change is (a) journaled — an engine
+        transaction can reject the whole plan with an O(ops) rollback — and
+        (b) identity-preserving: ``GPUState`` objects are never swapped out,
+        which keeps sub-views and fabric mirrors valid.
+
+        Workloads registered in ``layout`` are registered here; placements
+        present here but moved/absent in ``layout`` are removed before the
+        new spots are filled.
+        """
+        want: Dict[str, Tuple[str, Placement]] = {
+            p.wid: (gid, p)
+            for gid, g in layout.gpus.items()
+            for p in g.placements
+        }
+        have: Dict[str, Tuple[str, Placement]] = {
+            p.wid: (gid, p)
+            for gid, g in self.gpus.items()
+            for p in g.placements
+        }
+        for wid, w in layout.workloads.items():
+            if self.workloads.get(wid) != w:
+                self.add_workload(w)
+        for wid, (gid, pl) in have.items():
+            if want.get(wid) != (gid, pl):
+                self.remove(wid, gid)
+        for wid, (gid, pl) in want.items():
+            if have.get(wid) != (gid, pl):
+                self.place(wid, gid, pl.index, profile_id=pl.profile_id)
 
     def clone(self) -> "ClusterState":
         return ClusterState(

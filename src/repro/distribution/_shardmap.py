@@ -1,0 +1,64 @@
+"""``jax.shard_map`` compatibility shim.
+
+The distribution layer is written against the modern top-level
+``jax.shard_map`` signature (``axis_names=...``, ``check_vma=...``).  Older
+jax releases (< 0.5) only ship ``jax.experimental.shard_map.shard_map``,
+whose equivalents are ``auto`` (the complement of the manual axis set) and
+``check_rep``.  This module exposes one ``shard_map`` callable with the
+modern keyword surface that dispatches to whichever implementation the
+installed jax provides, so kernels and tests run unmodified on both.
+"""
+from __future__ import annotations
+
+from typing import Optional, Set
+
+import jax
+
+__all__ = ["shard_map"]
+
+
+if hasattr(jax, "shard_map"):
+
+    def shard_map(
+        f,
+        *,
+        mesh,
+        in_specs,
+        out_specs,
+        axis_names: Optional[Set[str]] = None,
+        check_vma: Optional[bool] = None,
+    ):
+        kw = {}
+        if axis_names is not None:
+            kw["axis_names"] = axis_names
+        if check_vma is not None:
+            kw["check_vma"] = check_vma
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw
+        )
+
+else:
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(
+        f,
+        *,
+        mesh,
+        in_specs,
+        out_specs,
+        axis_names: Optional[Set[str]] = None,
+        check_vma: Optional[bool] = None,
+    ):
+        # ``axis_names`` is intentionally ignored: the legacy ``auto=`` form
+        # cannot lower ``axis_index`` under SPMD partitioning (PartitionId is
+        # ambiguous there), so we run fully manual instead.  That is
+        # semantically identical for this repo's callers: specs over the
+        # non-manual axes are replicated and stage bodies use no cross-axis
+        # collectives outside the declared axis set.
+        del axis_names
+        kw = {}
+        if check_vma is not None:
+            kw["check_rep"] = check_vma
+        return _shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw
+        )

@@ -34,6 +34,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from ..configs.base import ArchConfig
+from ._shardmap import shard_map
 
 __all__ = ["apply_moe_alltoall"]
 
@@ -126,7 +127,7 @@ def apply_moe_alltoall(
 
     tok_spec = P(daxes if len(daxes) > 1 else (daxes[0] if daxes else None))
     fn = partial(_local_moe, e_local=e_local, rep=rep, cap=cap, k=k)
-    return jax.shard_map(
+    return shard_map(
         fn,
         mesh=mesh,
         in_specs=(

@@ -25,6 +25,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from ._shardmap import shard_map
+
 __all__ = ["gpipe"]
 
 
@@ -82,7 +84,7 @@ def gpipe(
         )
 
     pspec = jax.tree.map(lambda _: P(stage_axis), stage_params)
-    return jax.shard_map(
+    return shard_map(
         local,
         mesh=mesh,
         in_specs=(pspec, P()),

@@ -18,41 +18,56 @@ workloads.  This layer holds NO policy dispatch of its own; it only
 translates replicas <-> workloads and calls engine verbs.  ``fabric``
 ("auto"/"on"/"off") selects the vectorized fleet-scale fast path
 (``core/fabric.py``) for large clusters.
+
+Migration control plane
+-----------------------
+``compact`` / ``reconfigure`` ride the engine's plan/score/commit path: the
+engine prices every plan with per-replica live bytes (bf16 weights + the
+live KV cache of any attached engine, via ``kvcache.live_kv_bytes``) and a
+``CommitPolicy`` decides whether the saved nodes justify the disruption.
+Committed plans are then *executed stepwise* instead of teleporting:
+disruptive moves drain their replica's in-flight work first, wave moves copy
+state with KV handoff (the live decode cache follows the replica), and
+drained replicas resume last — the ``ExecutionReport`` records every step.
 """
 from __future__ import annotations
 
 import dataclasses
 import itertools
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple, Union
 
 import jax
 
 from ..configs import get_config
 from ..core.engine import PlacementEngine
 from ..core.metrics import PlacementMetrics, evaluate
-from ..core.migration import MigrationPlan, plan_migration
+from ..core.migration import CommitPolicy, MigrationCostModel, MigrationPlan, PlanCost
 from ..core.profiles import DeviceModel, Profile
 from ..core.state import ClusterState, Workload
 from ..core.tpu_profiles import TPU_V5E_POD, profile_for_chips
 from ..models import bundle
+from .kvcache import live_kv_bytes
 
 __all__ = [
     "replica_footprint_bytes",
+    "replica_footprint_parts",
     "replica_profile",
     "ClusterServer",
     "DeployReport",
     "PlacementReport",
+    "ExecutionReport",
+    "MigrationStep",
 ]
 
 
 # ---------------------------------------------------------------------------
 # replica sizing: arch -> memory footprint -> pod-partition profile
 # ---------------------------------------------------------------------------
-def replica_footprint_bytes(
-    arch: str, max_batch: int = 8, max_len: int = 8192, headroom: float = 0.2
-) -> int:
-    """Serving HBM footprint of one replica: bf16 params + ragged decode
-    cache for (max_batch, max_len), plus activation headroom."""
+def replica_footprint_parts(
+    arch: str, max_batch: int = 8, max_len: int = 8192
+) -> Tuple[int, int]:
+    """(weights bytes, reserved KV-cache bytes) of one serving replica:
+    bf16 params + ragged decode cache for (max_batch, max_len)."""
     mb = bundle(get_config(arch))
     params_b = 2 * mb.param_count()  # bf16 weights
     cfg = mb.cfg
@@ -60,9 +75,20 @@ def replica_footprint_bytes(
     cache = jax.eval_shape(
         lambda: mb.model.init_cache(max_batch, max_len, enc_len, ragged=True)
     )
-    cache_b = sum(
-        leaf.size * leaf.dtype.itemsize for leaf in jax.tree.leaves(cache)
-    )
+    return int(params_b), live_kv_bytes(cache)
+
+
+#: activation headroom applied on top of weights + KV when sizing partitions.
+FOOTPRINT_HEADROOM = 0.2
+
+
+def replica_footprint_bytes(
+    arch: str, max_batch: int = 8, max_len: int = 8192,
+    headroom: float = FOOTPRINT_HEADROOM,
+) -> int:
+    """Serving HBM footprint of one replica: bf16 params + ragged decode
+    cache for (max_batch, max_len), plus activation headroom."""
+    params_b, cache_b = replica_footprint_parts(arch, max_batch, max_len)
     return int((params_b + cache_b) * (1.0 + headroom))
 
 
@@ -79,12 +105,34 @@ def replica_profile(
 # ---------------------------------------------------------------------------
 # reports
 # ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class MigrationStep:
+    """One step of a plan's stepwise execution."""
+
+    kind: str  # "drain" | "copy" | "cutover" | "resume"
+    wid: str
+    wave: int = -1  # -1 for drain/resume of disruptive moves
+    kv_handoff: bool = False  # live decode cache followed the replica
+
+
+@dataclasses.dataclass
+class ExecutionReport:
+    """What actually happened when a committed plan was executed."""
+
+    steps: List[MigrationStep]
+    drained: List[str]  # replicas that lost in-flight state windows
+    handoffs: List[str]  # replicas whose live KV cache moved with them
+    bytes_moved: int = 0
+    downtime_seconds: float = 0.0
+
+
 @dataclasses.dataclass
 class DeployReport:
     placed: List[str]
     pending: List[str]
     plan: MigrationPlan
     metrics: PlacementMetrics
+    cost: Optional[PlanCost] = None
 
 
 @dataclasses.dataclass
@@ -92,6 +140,12 @@ class PlacementReport:
     before: PlacementMetrics
     after: PlacementMetrics
     plan: MigrationPlan
+    cost: Optional[PlanCost] = None
+    committed: bool = True
+    execution: Optional[ExecutionReport] = None
+    #: replicas a committed baseline-replay reconfigure failed to re-place
+    #: (measured Sec-5.2.3 behavior) — fully retired from the server.
+    evicted: List[str] = dataclasses.field(default_factory=list)
 
     @property
     def gpus_saved(self) -> int:
@@ -114,9 +168,23 @@ class ClusterServer:
         policy: str = "heuristic",
         mip_time_limit: float = 30.0,
         fabric: str = "auto",
+        commit: Union[str, CommitPolicy] = "always",
+        cost_model: Optional[MigrationCostModel] = None,
+        plan_deploys: bool = True,
     ):
         self.device = device
-        self.engine = PlacementEngine(policy, time_limit=mip_time_limit, fabric=fabric)
+        # plan_deploys=True gives DeployReport a scored plan; turn it off on
+        # fleet-scale servers where the per-deploy clone + diff walk would
+        # defeat the fabric fast path (DeployReport.plan/cost become None).
+        self.engine = PlacementEngine(
+            policy,
+            time_limit=mip_time_limit,
+            fabric=fabric,
+            commit=commit,
+            cost_model=cost_model,
+            plan_deploys=plan_deploys,
+        )
+        self.engine.bytes_for = self._replica_bytes
         self.policy = self.engine.policy_name
         self.mip_time_limit = mip_time_limit
         self.state = ClusterState.homogeneous(n_nodes, device, prefix="node")
@@ -126,6 +194,29 @@ class ClusterServer:
         self._rr: Dict[str, int] = {}
         #: wid -> attached live Engine (local demos / tests)
         self.engines: Dict[str, Any] = {}
+        #: wid -> (weights bytes, reserved KV bytes) for migration pricing
+        self._footprints: Dict[str, Tuple[int, int]] = {}
+        #: (arch, max_batch, max_len) -> parts, so repeat deploys stay cheap
+        self._parts_cache: Dict[Tuple[str, int, int], Tuple[int, int]] = {}
+
+    # -- migration pricing: live bytes per replica --------------------------
+    def _replica_bytes(self, wid: str) -> Optional[int]:
+        """Weights + live KV bytes of ``wid`` for the migration cost model.
+
+        The weight half comes from the replica's sized footprint; the KV
+        half prefers the *live* decode cache of an attached engine (what a
+        KV handoff actually copies) over the reservation-sized estimate.
+        Returns None for unknown replicas (cost model falls back to the
+        partition-sized estimate).
+        """
+        parts = self._footprints.get(wid)
+        if parts is None:
+            return None
+        weights_b, kv_b = parts
+        eng = self.engines.get(wid)
+        if eng is not None and getattr(eng, "cache", None) is not None:
+            kv_b = live_kv_bytes(eng.cache)
+        return weights_b + kv_b
 
     # ---------------------------------------------------------------- deploy
     def deploy(
@@ -139,29 +230,34 @@ class ClusterServer:
         profile_id: Optional[int] = None,
     ) -> DeployReport:
         """Initial deployment of n_replicas of ``model`` (paper Sec 2.3.1)."""
+        parts: Optional[Tuple[int, int]] = None
         if profile_id is None:
-            profile_id = replica_profile(
-                arch, max_batch, max_len, self.device
-            ).profile_id
+            key = (arch, max_batch, max_len)
+            parts = self._parts_cache.get(key)
+            if parts is None:
+                parts = replica_footprint_parts(arch, max_batch, max_len)
+                self._parts_cache[key] = parts
+            total = int(sum(parts) * (1.0 + FOOTPRINT_HEADROOM))
+            profile_id = profile_for_chips(total, self.device).profile_id
         news = []
         for _ in range(n_replicas):
             wid = f"{model}/r{next(self._counter)}"
             news.append(Workload(wid=wid, profile_id=profile_id, model=model))
             self.replicas[wid] = (model, arch)
-        before = self.state.clone()
-        pending = self._place_new(news)
+            if parts is not None:
+                self._footprints[wid] = parts
+        res = self.engine.deploy(self.state, news)
+        pending = res.pending
         for w in pending:
             del self.replicas[w.wid]
-        plan = plan_migration(before, self.state)
+            self._footprints.pop(w.wid, None)
         return DeployReport(
             placed=[w.wid for w in news if w not in pending],
             pending=[w.wid for w in pending],
-            plan=plan,
+            plan=res.plan,
             metrics=self.metrics(),
+            cost=res.cost,
         )
-
-    def _place_new(self, news: List[Workload]) -> List[Workload]:
-        return self.engine.deploy(self.state, news).pending
 
     # ---------------------------------------------------------------- retire
     def retire(self, model: str, n: int = 1) -> List[str]:
@@ -174,6 +270,7 @@ class ClusterServer:
             self.state.workloads.pop(wid, None)
             self.replicas.pop(wid, None)
             self.engines.pop(wid, None)
+            self._footprints.pop(wid, None)
         return victims
 
     # ----------------------------------------------------------- compaction
@@ -184,20 +281,99 @@ class ClusterServer:
         the pre-engine code silently fell back to the Sec-4.2 heuristic for
         non-MIP policies, so baseline policies may pack less tightly here.
         """
-        before_state = self.state.clone()
-        before = evaluate(before_state)
-        self.engine.compact(self.state)
-        plan = plan_migration(before_state, self.state)
-        return PlacementReport(before=before, after=evaluate(self.state, before_state), plan=plan)
+        return self._gated_verb("compact")
 
     # -------------------------------------------------------- reconfiguration
     def reconfigure(self) -> PlacementReport:
         """Optimal re-placement of everything (paper Sec 2.3.3); maintenance."""
-        before_state = self.state.clone()
-        before = evaluate(before_state)
-        self.engine.reconfigure(self.state)
-        plan = plan_migration(before_state, self.state)
-        return PlacementReport(before=before, after=evaluate(self.state, before_state), plan=plan)
+        return self._gated_verb("reconfigure")
+
+    def _gated_verb(self, verb: str) -> PlacementReport:
+        """Engine plan/score/commit, then stepwise execution of the plan."""
+        res = getattr(self.engine, verb)(self.state)
+        # res.baseline is the engine's own pre-verb snapshot — reuse it for
+        # the before/after metrics rather than cloning the fleet twice.
+        before_state = res.baseline
+        execution = (
+            self._execute_plan(res.plan)
+            if res.committed and res.plan is not None
+            else None
+        )
+        # A committed baseline-replay reconfigure may fail to re-place some
+        # replicas (its adopt removed them): retire them everywhere so no
+        # ghost replica lingers in routing/engines/footprints.
+        evicted = []
+        for w in res.pending:
+            if w.wid in self.replicas:
+                evicted.append(w.wid)
+            self.state.workloads.pop(w.wid, None)
+            self.replicas.pop(w.wid, None)
+            self.engines.pop(w.wid, None)
+            self._footprints.pop(w.wid, None)
+        return PlacementReport(
+            before=evaluate(before_state),
+            after=evaluate(self.state, before_state),
+            plan=res.plan,
+            cost=res.cost,
+            committed=res.committed,
+            execution=execution,
+            evicted=evicted,
+        )
+
+    # ------------------------------------------------------- plan execution
+    def _execute_plan(self, plan: MigrationPlan) -> ExecutionReport:
+        """Execute a committed plan stepwise: drain -> move -> resume.
+
+        The cluster state already holds the final layout (the engine
+        committed it); this walks the *runtime* transition.  Disruptive
+        moves drain their replica first (in-flight work on an attached
+        engine is pumped to completion — no tokens are lost, but the
+        replica's slots go cold).  Wave moves copy state in parallel and
+        finish with a cutover; an attached engine object stays bound to its
+        wid through the move — the live decode cache rides along (KV
+        handoff).  Drained replicas resume last, cold.
+        """
+        steps: List[MigrationStep] = []
+        drained: List[str] = []
+        handoffs: List[str] = []
+        for mv in plan.disruptive:
+            eng = self.engines.get(mv.wid)
+            if eng is not None:
+                while getattr(eng, "has_work", False):
+                    eng.step()  # finish in-flight requests before teardown
+            steps.append(MigrationStep("drain", mv.wid))
+            drained.append(mv.wid)
+        for i, wave in enumerate(plan.waves):
+            for mv in wave:
+                if mv.src_gid is None:
+                    continue  # fresh deployment: nothing to copy
+                handoff = mv.wid in self.engines
+                steps.append(MigrationStep("copy", mv.wid, wave=i, kv_handoff=handoff))
+                steps.append(MigrationStep("cutover", mv.wid, wave=i))
+                if handoff:
+                    handoffs.append(mv.wid)
+        for mv in plan.disruptive:
+            # drained replicas still transfer their weights (KV went cold
+            # with the drain, so no handoff) before the cold resume.
+            steps.append(MigrationStep("copy", mv.wid))
+            steps.append(MigrationStep("resume", mv.wid))
+        # The engine already priced this exact plan (same state, same
+        # bytes_for) when it scored the commit; fresh deployments priced at
+        # zero there, so the totals are the executed moves' totals.
+        cost = plan.cost
+        if cost is None:  # plans from older call sites: price once here
+            cost = self.engine.cost_model.price(
+                plan, self.state, bytes_for=self.engine.bytes_for
+            )
+        bytes_moved = cost.total_bytes
+        downtime = cost.downtime_seconds
+        return ExecutionReport(
+            steps=steps,
+            drained=drained,
+            handoffs=handoffs,
+            bytes_moved=bytes_moved,
+            downtime_seconds=downtime,
+        )
 
     # ---------------------------------------------------------------- serving
     def replicas_of(self, model: str) -> List[str]:

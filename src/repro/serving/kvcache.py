@@ -25,7 +25,26 @@ import jax.numpy as jnp
 
 Params = Dict[str, Any]
 
-__all__ = ["insert_prefix", "BlockAllocator", "PagedKVCache"]
+__all__ = ["insert_prefix", "live_kv_bytes", "BlockAllocator", "PagedKVCache"]
+
+
+def live_kv_bytes(cache: Any) -> int:
+    """Bytes held by a live KV-cache pytree (decode state or PagedKVCache).
+
+    This is the *live-state* half of a migration's transfer size: when a
+    replica moves between partitions with KV handoff, its decode cache rides
+    along with the weights.  Works on any pytree of arrays (ragged decode
+    caches, paged pools, ShapeDtypeStructs from ``jax.eval_shape``).
+    """
+    if isinstance(cache, PagedKVCache):
+        cache = (cache.pool_k, cache.pool_v)
+    return int(
+        sum(
+            leaf.size * leaf.dtype.itemsize
+            for leaf in jax.tree_util.tree_leaves(cache)
+            if hasattr(leaf, "dtype")
+        )
+    )
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,367 @@
+"""Migration control plane: plan_migration cycle-breaking, cost-model edge
+cases, CommitPolicy decisions, and transactional plan rejection."""
+import dataclasses
+
+import pytest
+
+from repro.core.engine import PlacementEngine
+from repro.core.events import Event, OnlineSimulator, Trace
+from repro.core.migration import (
+    CommitPolicy,
+    MigrationCostModel,
+    MigrationPlan,
+    Move,
+    PlanGains,
+    plan_migration,
+)
+from repro.core.state import ClusterState, Workload
+
+
+def _state(placements, n_gpus=3):
+    st = ClusterState.homogeneous(n_gpus)
+    for wid, pid, gid, idx in placements:
+        if wid not in st.workloads:
+            st.add_workload(Workload(wid=wid, profile_id=pid))
+        st.place(wid, gid, idx)
+    return st
+
+
+def _placements(state):
+    return {
+        (gid, p.wid, p.profile_id, p.index)
+        for gid, g in state.gpus.items()
+        for p in g.placements
+    }
+
+
+# ---------------------------------------------------------------------------
+# plan_migration cycle-breaking
+# ---------------------------------------------------------------------------
+class TestCycleBreaking:
+    def test_two_workload_swap_breaks_one_disruptively(self):
+        """A<->B swap on one full GPU: no free destination span exists, so
+        exactly one move is drained (the smaller footprint) and the other
+        lands in a wave afterwards."""
+        initial = _state([("a", 14, "gpu0", 0), ("b", 14, "gpu0", 4)], n_gpus=1)
+        final = _state([("a", 14, "gpu0", 4), ("b", 14, "gpu0", 0)], n_gpus=1)
+        plan = plan_migration(initial, final)
+        assert plan.n_moves == 2
+        assert len(plan.disruptive) == 1
+        assert plan.disruptive[0].disruptive
+        # victim choice is deterministic: smallest span, then wid order
+        assert plan.disruptive[0].wid == "a"
+        surviving = [mv for w in plan.waves for mv in w]
+        assert [mv.wid for mv in surviving] == ["b"]
+        assert not surviving[0].disruptive
+
+    def test_cross_gpu_cycle(self):
+        """Full GPUs exchanging workloads force a drain too."""
+        initial = _state([("a", 0, "gpu0", 0), ("b", 0, "gpu1", 0)], n_gpus=2)
+        final = _state([("a", 0, "gpu1", 0), ("b", 0, "gpu0", 0)], n_gpus=2)
+        plan = plan_migration(initial, final)
+        assert plan.n_moves == 2
+        assert len(plan.disruptive) == 1
+        assert plan.n_sequential >= 1
+
+    def test_chain_into_free_space_is_not_disruptive(self):
+        """A shift chain with a free landing spot resolves in waves only."""
+        initial = _state([("a", 14, "gpu0", 0), ("b", 14, "gpu0", 2)], n_gpus=1)
+        final = _state([("a", 14, "gpu0", 2), ("b", 14, "gpu0", 4)], n_gpus=1)
+        plan = plan_migration(initial, final)
+        assert plan.n_moves == 2
+        assert not plan.disruptive
+        # b must vacate before a lands: two waves, b first
+        assert [[mv.wid for mv in w] for w in plan.waves] == [["b"], ["a"]]
+
+    def test_unmoved_workloads_produce_empty_plan(self):
+        st = _state([("a", 5, "gpu0", 0)])
+        plan = plan_migration(st, st.clone())
+        assert plan.n_moves == 0 and plan.n_sequential == 0
+        assert plan.n_migrations == 0
+
+
+# ---------------------------------------------------------------------------
+# cost model edge cases
+# ---------------------------------------------------------------------------
+class TestCostModel:
+    def _swap_plan_and_state(self):
+        initial = _state([("a", 14, "gpu0", 0), ("b", 14, "gpu0", 4)], n_gpus=1)
+        final = _state([("a", 14, "gpu0", 4), ("b", 14, "gpu0", 0)], n_gpus=1)
+        return plan_migration(initial, final), final
+
+    def test_zero_kv_workloads_cost_no_bytes(self):
+        plan, final = self._swap_plan_and_state()
+        cm = MigrationCostModel()
+        cost = cm.price(plan, final, bytes_for=lambda wid: 0)
+        assert cost.total_bytes == 0
+        # downtime survives: drains and cutovers are not transfer-bound
+        assert cost.downtime_seconds == pytest.approx(
+            cm.cutover_seconds + cm.drain_seconds + cm.resume_seconds
+        )
+        assert cost.n_disruptive == 1
+
+    def test_fresh_deployments_are_free(self):
+        empty = ClusterState.homogeneous(1)
+        final = _state([("a", 5, "gpu0", 0)], n_gpus=1)
+        plan = plan_migration(empty, final)
+        cost = MigrationCostModel().price(plan, final)
+        assert plan.n_moves == 1 and plan.n_migrations == 0
+        assert cost.total_bytes == 0 and cost.downtime_seconds == 0.0
+        assert cost.duration_seconds == 0.0
+
+    def test_single_wave_plan_duration_is_its_makespan(self):
+        initial = _state([("a", 14, "gpu0", 0), ("b", 19, "gpu0", 2)], n_gpus=2)
+        final = _state([("a", 14, "gpu1", 0), ("b", 19, "gpu1", 2)], n_gpus=2)
+        plan = plan_migration(initial, final)
+        assert len(plan.waves) == 1 and not plan.disruptive
+        cm = MigrationCostModel()
+        cost = cm.price(plan, final)
+        slowest = max(
+            cm.move_cost(mv, final).transfer_seconds for mv in plan.waves[0]
+        )
+        assert cost.duration_seconds == pytest.approx(slowest)
+        assert cost.wave_makespans == (pytest.approx(slowest),)
+        # parallel copies: the wave is NOT the sum of its transfers
+        total = sum(
+            cm.move_cost(mv, final).transfer_seconds for mv in plan.waves[0]
+        )
+        assert cost.duration_seconds < total
+
+    def test_per_wave_makespan_monotonicity(self):
+        """Adding a move to a wave can only extend its makespan, and doubling
+        the bandwidth halves every transfer-bound duration."""
+        st = _state(
+            [("a", 14, "gpu0", 0), ("b", 9, "gpu0", 4), ("c", 19, "gpu1", 0)],
+            n_gpus=2,
+        )
+        mv_small = Move("a", "gpu0", 0, "gpu1", 4, 14)
+        mv_big = Move("b", "gpu0", 4, "gpu1", 0, 9)
+        cm = MigrationCostModel()
+        solo = cm.price(MigrationPlan(waves=[[mv_small]], disruptive=[]), st)
+        both = cm.price(MigrationPlan(waves=[[mv_small, mv_big]], disruptive=[]), st)
+        assert both.wave_makespans[0] >= solo.wave_makespans[0]
+        assert both.wave_makespans[0] == pytest.approx(
+            cm.move_cost(mv_big, st).transfer_seconds
+        )
+        fast = dataclasses.replace(cm, link_gbps=cm.link_gbps * 2)
+        both_fast = fast.price(
+            MigrationPlan(waves=[[mv_small, mv_big]], disruptive=[]), st
+        )
+        assert both_fast.duration_seconds == pytest.approx(
+            both.duration_seconds / 2
+        )
+
+    def test_disruptive_moves_serialize_into_the_window(self):
+        plan, final = self._swap_plan_and_state()
+        cm = MigrationCostModel()
+        cost = cm.price(plan, final)
+        drain = next(
+            cm.move_cost(mv, final).downtime_seconds for mv in plan.disruptive
+        )
+        wave = sum(cost.wave_makespans)
+        assert cost.duration_seconds == pytest.approx(wave + drain)
+
+    def test_bytes_per_memory_slice_override_beats_device_estimate(self):
+        plan, final = self._swap_plan_and_state()
+        default = MigrationCostModel().price(plan, final)
+        tuned = MigrationCostModel(bytes_per_memory_slice=1 << 30).price(plan, final)
+        # A100 memory slices are 10 GiB; the explicit 1 GiB override must win.
+        assert default.total_bytes == 2 * 2 * (10 << 30)
+        assert tuned.total_bytes == 2 * 2 * (1 << 30)
+
+    def test_slo_disruption_scales_with_migration_cost_weight(self):
+        plan, final = self._swap_plan_and_state()
+        heavy = final.clone()
+        for wid in list(heavy.workloads):
+            heavy.workloads[wid] = dataclasses.replace(
+                heavy.workloads[wid], migration_cost=3.0
+            )
+        cm = MigrationCostModel()
+        assert cm.price(plan, heavy).slo_disruption == pytest.approx(
+            3.0 * cm.price(plan, final).slo_disruption
+        )
+
+
+# ---------------------------------------------------------------------------
+# commit policy decisions
+# ---------------------------------------------------------------------------
+class TestCommitPolicy:
+    def _cost(self, plan_state):
+        plan, final = plan_state
+        return MigrationCostModel().price(plan, final)
+
+    def test_noop_plans_always_commit(self):
+        st = _state([("a", 5, "gpu0", 0)])
+        cost = MigrationCostModel().price(plan_migration(st, st.clone()), st)
+        for mode in ("always", "net-positive", "budgeted"):
+            assert CommitPolicy(mode=mode).decide(PlanGains(), cost).commit
+
+    def test_net_positive_rejects_zero_gain_reshuffles(self):
+        initial = _state([("a", 14, "gpu0", 0), ("b", 14, "gpu0", 4)], n_gpus=1)
+        final = _state([("a", 14, "gpu0", 4), ("b", 14, "gpu0", 0)], n_gpus=1)
+        cost = MigrationCostModel().price(plan_migration(initial, final), final)
+        dec = CommitPolicy(mode="net-positive").decide(PlanGains(0, 0), cost)
+        assert not dec.commit and dec.price > 0
+
+    def test_budgeted_move_and_downtime_budgets(self):
+        initial = _state([("a", 14, "gpu0", 0), ("b", 14, "gpu0", 4)], n_gpus=1)
+        final = _state([("a", 14, "gpu0", 4), ("b", 14, "gpu0", 0)], n_gpus=1)
+        cost = MigrationCostModel().price(plan_migration(initial, final), final)
+        gains = PlanGains(1, 0)
+        assert not CommitPolicy(mode="budgeted", move_budget=1).decide(gains, cost).commit
+        assert CommitPolicy(
+            mode="budgeted", move_budget=5, downtime_budget_seconds=None
+        ).decide(gains, cost).commit
+        assert not CommitPolicy(
+            mode="budgeted", move_budget=5, downtime_budget_seconds=0.1
+        ).decide(gains, cost).commit
+
+    def test_move_budget_is_a_hard_cap_in_every_mode(self):
+        """The legacy migration_budget contract: a set move budget binds even
+        when the mode is net-positive or always."""
+        initial = _state([("a", 14, "gpu0", 0), ("b", 14, "gpu0", 4)], n_gpus=1)
+        final = _state([("a", 14, "gpu0", 4), ("b", 14, "gpu0", 0)], n_gpus=1)
+        cost = MigrationCostModel().price(plan_migration(initial, final), final)
+        huge_gain = PlanGains(gpus_saved=100, waste_saved=100)
+        for mode in ("always", "net-positive", "budgeted"):
+            dec = CommitPolicy(mode=mode, move_budget=1).decide(huge_gain, cost)
+            assert not dec.commit, mode
+
+    def test_mode_normalization_and_validation(self):
+        assert CommitPolicy(mode="net_positive").mode == "net-positive"
+        with pytest.raises(ValueError, match="commit mode"):
+            CommitPolicy(mode="sometimes")
+
+
+# ---------------------------------------------------------------------------
+# engine plan/score/commit integration
+# ---------------------------------------------------------------------------
+class TestEngineControlPlane:
+    def _fragmented(self):
+        return _state(
+            [
+                ("w1", 5, "gpu0", 0),
+                ("w2", 9, "gpu1", 0),
+                ("w3", 19, "gpu2", 0),
+                ("w4", 19, "gpu2", 1),
+            ],
+            n_gpus=3,
+        )
+
+    @pytest.mark.parametrize("policy", ["first_fit", "rule_based", "frag_aware"])
+    def test_compact_returns_scored_plan(self, policy):
+        st = self._fragmented()
+        res = PlacementEngine(policy).compact(st)
+        assert res.committed and res.plan is not None and res.cost is not None
+        assert res.plan.cost is res.cost
+        assert res.gains is not None and res.decision is not None
+        st.validate()
+
+    def test_mip_compact_returns_scored_plan(self):
+        pytest.importorskip("scipy")
+        st = self._fragmented()
+        res = PlacementEngine("mip", time_limit=5).compact(st)
+        assert res.committed and res.plan is not None and res.cost is not None
+
+    @pytest.mark.parametrize("policy", ["rule_based", "frag_aware", "first_fit"])
+    def test_rejection_is_byte_identical_rollback(self, policy):
+        st = self._fragmented()
+        before = _placements(st)
+        order_before = {g: [p.wid for p in st.gpus[g].placements] for g in st.gpus}
+        reject_all = CommitPolicy(
+            mode="net-positive", gpu_seconds_value=0.0, waste_seconds_value=0.0
+        )
+        res = PlacementEngine(policy, commit=reject_all).compact(st)
+        assert not res.committed
+        assert res.plan.n_moves > 0  # the policy DID find a compaction
+        assert _placements(st) == before
+        assert {
+            g: [p.wid for p in st.gpus[g].placements] for g in st.gpus
+        } == order_before
+        assert res.pending == []
+        st.validate()
+
+    def test_reconfigure_rejection_rolls_back_adopted_layout(self):
+        st = self._fragmented()
+        before = _placements(st)
+        reject_all = CommitPolicy(
+            mode="net-positive", gpu_seconds_value=0.0, waste_seconds_value=0.0
+        )
+        res = PlacementEngine("rule_based", commit=reject_all).reconfigure(st)
+        assert not res.committed
+        assert _placements(st) == before
+        st.validate()
+
+    def test_deploy_plans_when_enabled(self):
+        st = ClusterState.homogeneous(2)
+        eng = PlacementEngine("rule_based", plan_deploys=True)
+        res = eng.deploy(st, [Workload("n1", 14), Workload("n2", 19)])
+        assert res.plan is not None and res.plan.n_moves == 2
+        assert res.plan.n_migrations == 0  # all fresh, wave-0
+        assert res.cost.total_bytes == 0
+        eng2 = PlacementEngine("rule_based")
+        res2 = eng2.deploy(st, [Workload("n3", 19)])
+        assert res2.plan is None  # hot path stays plan-free by default
+
+
+# ---------------------------------------------------------------------------
+# online simulator integration
+# ---------------------------------------------------------------------------
+class TestOnlineControlPlane:
+    def _trace(self):
+        events = [
+            Event(time=1.0, kind="arrival", workloads=(
+                Workload("w0", 5), Workload("w1", 9),
+                Workload("w2", 14), Workload("w3", 15),
+            )),
+            Event(time=5.0, kind="departure", wids=("w0", "w2")),
+            Event(time=6.0, kind="compact"),
+        ]
+        return Trace(events=events, horizon=10.0)
+
+    def test_committed_plan_accrues_cost_stats(self):
+        st = ClusterState.homogeneous(3)
+        sim = OnlineSimulator(st, PlacementEngine("rule_based"))
+        stats = sim.run(self._trace())
+        assert stats.n_compactions == 1
+        assert stats.bytes_moved > 0
+        assert stats.disruption_seconds > 0
+        assert stats.migration_window_seconds > 0
+        d = stats.as_dict()
+        assert "n_plans_rejected" in d and "disruption_minutes" in d
+        assert d["disruption_minutes"] == pytest.approx(
+            stats.disruption_seconds / 60.0
+        )
+
+    def test_legacy_migration_budget_maps_to_budgeted_commit(self):
+        st = ClusterState.homogeneous(3)
+        eng = PlacementEngine("rule_based")
+        sim = OnlineSimulator(st, eng, migration_budget=0)
+        # the override is simulator-local: the shared engine keeps its policy
+        assert eng.commit_policy.mode == "always"
+        assert sim._commit_override.mode == "budgeted"
+        assert sim._commit_override.move_budget == 0
+        stats = sim.run(self._trace())
+        assert eng.commit_policy.mode == "always"  # restored after every verb
+        assert stats.n_compactions == 0
+        assert stats.n_compactions_skipped == 1
+        assert stats.n_plans_rejected == 1
+        assert stats.bytes_moved == 0
+
+    def test_periodic_reconfigure_injection(self):
+        st = ClusterState.homogeneous(3)
+        trace = Trace(
+            events=[
+                Event(time=1.0, kind="arrival", workloads=(Workload("a", 15),)),
+                Event(time=2.0, kind="arrival", workloads=(Workload("b", 15),)),
+            ],
+            horizon=20.0,
+        )
+        sim = OnlineSimulator(
+            st, PlacementEngine("rule_based"), reconfigure_every=6.0
+        )
+        stats = sim.run(trace)
+        st.validate()
+        assert stats.n_reconfigures + stats.n_plans_rejected + \
+            stats.n_reconfigures_deferred == 3  # t=6,12,18
+        assert stats.n_compactions_deferred == 0  # no compact triggers ran

@@ -272,6 +272,35 @@ def test_cluster_compaction_saves_nodes():
         assert srv.state.gpu_of(wid) is not None
 
 
+def test_cluster_reconfigure_eviction_retires_ghosts():
+    """A committed reconfigure that cannot re-place a replica must retire it
+    from every server-side map (no ghost in routing/engines/footprints)."""
+    from repro.core.state import Workload
+
+    srv = ClusterServer(n_nodes=4, policy="heuristic")
+    srv.deploy("m", "smollm-135m", 3, profile_id=4)
+    victim = sorted(srv.replicas)[0]
+    srv.attach_engine(victim, object())
+
+    real = srv.engine.reconfigure
+
+    def evicting(state):
+        res = real(state)
+        gid = state.gpu_of(victim)
+        state.gpus[gid].remove(victim)  # the replay "failed" to re-place it
+        res.pending = [Workload(victim, 4, model="m")]
+        return res
+
+    srv.engine.reconfigure = evicting
+    rep = srv.reconfigure()
+    assert rep.evicted == [victim]
+    assert victim not in srv.replicas
+    assert victim not in srv.engines
+    assert victim not in srv.state.workloads
+    assert victim not in srv.replicas_of("m")
+    srv.state.validate()
+
+
 def test_cluster_reconfigure_and_route():
     srv = ClusterServer(n_nodes=8, policy="heuristic")
     srv.deploy("m", "smollm-135m", 5, profile_id=4)
