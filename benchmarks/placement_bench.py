@@ -22,6 +22,13 @@ Usage:
 trace over a mixed A100 + TPU-pod fleet, periodic compaction with an
 optional migration budget, reporting time-averaged GPUs-used and wastage.
 
+``--autoscale`` switches to the demand-driven mode: seeded request traffic
+(phase-shifted diurnal chat models + a flash-crowd embedding model) drives
+the traffic/perf/autoscaler subsystem over an A100 fleet; rows are
+controller x rate-scale x commit-mode, columns SLO attainment / GPUs-used /
+disruption-minutes.  ``static`` rows are the peak-provisioned baseline the
+closed loop must beat.
+
 ``--fleet-scale`` benchmarks the vectorized placement fabric
 (core/fabric.py) against the scalar path on large fleets: per size, one
 deploy of a ~60%-load test case through first_fit and rule_based with the
@@ -34,16 +41,28 @@ with ``--json ''``) so the repo's perf trajectory is tracked across PRs.
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
+import math
+import os
 import time
 from typing import Dict, Optional, Sequence
 
 from repro.core import metrics
+from repro.core.autoscaler import SLO, Autoscaler, AutoscalerConfig
 from repro.core.engine import PlacementEngine
-from repro.core.events import OnlineSimulator, build_fleet, generate_trace
+from repro.core.events import (
+    DemandSimulator,
+    ModelServiceSpec,
+    OnlineSimulator,
+    build_fleet,
+    generate_trace,
+)
+from repro.core.perfmodel import PerfModel
 from repro.core.profiles import A100_80GB
 from repro.core.simulator import TestCase, generate_test_case
 from repro.core.tpu_profiles import TPU_V5E_POD
+from repro.core.traffic import DiurnalRate, FlashCrowd, ModelTraffic, generate_requests
 
 APPROACHES = {
     "initial": ("first_fit", "load_balanced", "rule_based", "frag_aware",
@@ -218,6 +237,159 @@ def print_trace_table(table: Dict[str, Dict[str, float]], header: str) -> None:
 
 
 # ---------------------------------------------------------------------------
+# autoscale mode (--autoscale): demand-driven traffic + replica controller
+# ---------------------------------------------------------------------------
+#: default demand scenario: three phase-shifted diurnal chat models plus one
+#: flash-crowd embedding model, on A100 MIG profiles.  ``rate_scale``
+#: multiplies every base rate; the diurnal period is the trace horizon (one
+#: simulated "day" per run).  (profile, ladder, traffic args) per model.
+_SCENARIO = (
+    ("chat-l", 5, (), dict(base_rps=100.0, amplitude=0.7, phase=0.0), 512, 128),
+    ("chat-m", 9, (), dict(base_rps=75.0, amplitude=0.8, phase=0.5), 512, 96),
+    ("bot-s", 15, (15, 19), dict(base_rps=40.0, amplitude=0.6, phase=0.25), 256, 32),
+    ("embed", 19, (), None, 128, 4),  # FlashCrowd (mid-trace spike)
+)
+
+_AUTOSCALE_COLS = {
+    "slo_attainment": "slo_attain",
+    "ttft_p95": "ttft_p95",
+    "time_avg_gpus_used": "avg_gpus",
+    "peak_gpus_used": "peak_gpus",
+    "time_avg_queue_depth": "avg_queue",
+    "n_requests": "requests",
+    "n_unserved": "unserved",
+    "n_scale_ups": "ups",
+    "n_scale_downs": "downs",
+    "n_resizes": "resizes",
+    "n_deploy_rejected": "deploy_rej",
+    "n_plans_rejected": "plans_rej",
+    "disruption_minutes": "disrupt_min",
+    "gib_moved": "gib_moved",
+    "engine_seconds": "engine_s",
+}
+
+
+def _scenario_specs(rate_scale: float, horizon: float, slo: SLO):
+    """(ModelServiceSpec list, ModelTraffic list, peak rps per model)."""
+    specs, traffic, peaks = [], [], {}
+    for model, pid, ladder, diurnal, mean_p, mean_d in _SCENARIO:
+        if diurnal is not None:
+            pat = DiurnalRate(
+                base_rps=diurnal["base_rps"] * rate_scale,
+                amplitude=diurnal["amplitude"],
+                period=horizon,
+                phase=diurnal["phase"] * horizon,
+            )
+        else:
+            pat = FlashCrowd(
+                base_rps=20.0 * rate_scale,
+                flash_at=horizon * 0.4,
+                flash_duration=horizon * 0.15,
+                multiplier=4.0,
+            )
+        specs.append(ModelServiceSpec(
+            model=model, profile_id=pid, profile_ladder=ladder, slo=slo,
+        ))
+        traffic.append(ModelTraffic(
+            model=model, pattern=pat,
+            mean_prompt_len=mean_p, mean_decode_len=mean_d,
+        ))
+        peaks[model] = pat.peak_rate
+    return specs, traffic, peaks
+
+
+def _static_replicas(spec: ModelServiceSpec, traffic: ModelTraffic,
+                     peak_rps: float, perf: PerfModel, rho: float) -> int:
+    """Peak-provisioned static sizing (the no-autoscaler baseline)."""
+    cap = perf.capacity_rps(
+        A100_80GB, spec.profile_id,
+        traffic.mean_prompt_len, traffic.mean_decode_len,
+    )
+    return max(1, math.ceil(peak_rps / (rho * cap)))
+
+
+def run_autoscale(
+    policy: str,
+    n_gpus: int,
+    seed: int,
+    horizon: float,
+    rate_scales: Sequence[float],
+    controllers: Sequence[str],
+    commit_modes: Sequence[str],
+    compact_every: Optional[float],
+    autoscale_every: float,
+) -> Dict[str, Dict[str, float]]:
+    """Rate-sweep x controller x commit grid over the demand scenario.
+
+    ``static`` rows provision every model for its PEAK rate up front and
+    never scale — the over-provisioning baseline the closed loop must beat
+    on time-averaged GPUs at equal-or-better SLO attainment.
+    """
+    slo = SLO(ttft_seconds=2.0, tpot_seconds=0.1, attainment_target=0.95)
+    perf = PerfModel()
+    out: Dict[str, Dict[str, float]] = {}
+    for rate in rate_scales:
+        specs, tspecs, peaks = _scenario_specs(rate, horizon, slo)
+        traffic = generate_requests(tspecs, seed, horizon)
+        for controller in controllers:
+            for commit in commit_modes:
+                fleet = build_fleet([(A100_80GB, n_gpus)])
+                if controller == "static":
+                    scaler = None
+                    rho = AutoscalerConfig().target_utilization
+                    run_specs = [
+                        dataclasses.replace(
+                            spec,
+                            initial_replicas=_static_replicas(
+                                spec, ts, peaks[spec.model], perf, rho
+                            ),
+                        )
+                        for spec, ts in zip(specs, tspecs)
+                    ]
+                else:
+                    cfg = AutoscalerConfig(mode=controller)
+                    scaler = Autoscaler(cfg)
+                    # Warm start at the t=0 sizing: the service was already
+                    # running; what's under test is demand *tracking*.
+                    run_specs = [
+                        dataclasses.replace(
+                            spec,
+                            initial_replicas=_static_replicas(
+                                spec, ts, ts.pattern.rate(0.0), perf,
+                                cfg.target_utilization,
+                            ),
+                        )
+                        for spec, ts in zip(specs, tspecs)
+                    ]
+                sim = DemandSimulator(
+                    fleet,
+                    PlacementEngine(policy, commit=commit),
+                    run_specs,
+                    autoscaler=scaler,
+                    perf=perf,
+                    autoscale_every=autoscale_every,
+                    compact_every=compact_every,
+                )
+                stats = sim.run(traffic)
+                fleet.validate()
+                d = stats.as_dict()
+                d["gib_moved"] = stats.bytes_moved / 2**30
+                key = f"{controller}@r{rate:g}@{commit}"
+                out[key] = {k: float(d[k]) for k in _AUTOSCALE_COLS}
+    return out
+
+
+def print_autoscale_table(table: Dict[str, Dict[str, float]], header: str) -> None:
+    print(f"\n== autoscale: {header} ==")
+    cols = list(next(iter(table.values())).keys())
+    width = max(30, max(len(a) for a in table) + 2)
+    print("controller".ljust(width)
+          + "".join(_AUTOSCALE_COLS[c][:11].rjust(12) for c in cols))
+    for a, row in table.items():
+        print(a.ljust(width) + "".join(f"{row[c]:12.3f}" for c in cols))
+
+
+# ---------------------------------------------------------------------------
 # fleet-scale mode (--fleet-scale): scalar path vs vectorized fabric
 # ---------------------------------------------------------------------------
 #: metrics surfaced in the fleet-scale comparison (the acceptance metrics:
@@ -304,12 +476,26 @@ def print_fleet_scale(n_gpus: int, rows: Dict[str, Dict[str, float]]) -> None:
 
 
 def write_json(path: str, report: Dict) -> None:
+    """Write (merging into an existing report, so e.g. a ``--trace`` run and
+    an ``--autoscale`` run can share one ``BENCH_placement.json``)."""
     if not path:
         return
-    report["schema"] = "placement_bench/v1"
-    report["generated_unix"] = time.time()
+    merged: Dict = {}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                prev = json.load(f)
+            if isinstance(prev, dict) and str(
+                prev.get("schema", "")
+            ).startswith("placement_bench/"):
+                merged = prev
+        except (OSError, ValueError):
+            pass  # unreadable previous report: start fresh
+    merged.update(report)
+    merged["schema"] = "placement_bench/v1"
+    merged["generated_unix"] = time.time()
     with open(path, "w") as f:
-        json.dump(report, f, indent=2, sort_keys=True)
+        json.dump(merged, f, indent=2, sort_keys=True)
     print(f"\nwrote {path}")
 
 
@@ -342,6 +528,19 @@ def main() -> None:
     ap.add_argument("--reconfigure-every", type=float, default=None,
                     help="periodic maintenance repack (Sec 2.3.3) in the "
                     "online trace; the verb the CommitPolicy keeps honest")
+    # autoscale mode
+    ap.add_argument("--autoscale", action="store_true",
+                    help="demand-driven mode: request traffic + replica "
+                    "controller closing the loop into the engine")
+    ap.add_argument("--rate-scale", type=float, nargs="+", default=[1.0],
+                    help="multipliers on the demand scenario's base rates "
+                    "(several = arrival-rate sweep)")
+    ap.add_argument("--controller", nargs="+", default=["slo", "static"],
+                    choices=["slo", "target-utilization", "static"],
+                    help="autoscaler mode(s); 'static' = peak-provisioned "
+                    "fixed replicas (the over-provisioning baseline)")
+    ap.add_argument("--autoscale-every", type=float, default=5.0,
+                    help="control-tick period (simulated seconds)")
     # fleet-scale mode
     ap.add_argument("--fleet-scale", type=int, nargs="+", default=None,
                     metavar="N", help="fleet sizes for the fabric-vs-scalar "
@@ -362,6 +561,25 @@ def main() -> None:
             print_fleet_scale(n, rows)
             print(f"   ({time.time() - t0:.0f}s)")
             report["fleet_scale"][str(n)] = rows
+        write_json(args.json, report)
+        return
+
+    if args.autoscale:
+        n_a100 = args.gpus[0]
+        t0 = time.time()
+        table = run_autoscale(
+            args.policies[0], n_a100, args.seed, args.horizon,
+            args.rate_scale, args.controller, args.commit,
+            args.compact_every if args.compact_every > 0 else None,
+            args.autoscale_every,
+        )
+        print_autoscale_table(
+            table,
+            f"{n_a100}x A100, horizon {args.horizon}, "
+            f"policy {args.policies[0]}",
+        )
+        print(f"   ({time.time() - t0:.0f}s)")
+        report["autoscale"] = table
         write_json(args.json, report)
         return
 

@@ -1,21 +1,30 @@
-"""End-to-end serving driver: the paper's placement engine scheduling LIVE
-model replicas, with real forward passes and batched requests.
+"""End-to-end serving driver: demand-driven autoscaling of LIVE model
+replicas, with real forward passes and batched requests.
 
-Flow:
-  1. deploy three models onto a pod cluster (initial deployment use case);
-  2. attach a continuous-batching Engine to every placed replica;
-  3. stream batched requests through the round-robin router and pump all
-     engines to completion;
-  4. scale down, run compaction, verify the survivors still serve.
+The demo closes the full loop of the traffic/autoscaling subsystem on real
+engines instead of hand-scripting deploy/scale-down:
+
+  1. deploy one seed replica per model and attach continuous-batching
+     Engines (``engine_factory`` auto-attaches engines to scale-ups);
+  2. replay a seeded bursty request trace (``core/traffic``) tick by tick:
+     submit the tick's requests, pump all engines to completion, and
+     measure each request's wall-clock latency;
+  3. after every tick, ``ClusterServer.autoscale()`` turns the observed
+     offered load + measured SLO attainment into replica targets applied
+     through the placement engine (scale-ups get live engines, scale-downs
+     drain before teardown);
+  4. compaction afterwards, then verify the survivors still serve.
 
     PYTHONPATH=src python examples/serve_cluster.py
 """
 import time
 
 import jax
-import numpy as np
 
 from repro.configs import get_config, reduced
+from repro.core.autoscaler import Autoscaler, AutoscalerConfig
+from repro.core.perfmodel import DeviceThroughput, PerfModel
+from repro.core.traffic import ConstantRate, FlashCrowd, ModelTraffic, generate_requests
 from repro.models import bundle
 from repro.serving import Engine, EngineConfig, Request
 from repro.serving.cluster import ClusterServer
@@ -24,6 +33,11 @@ MODELS = {
     "chat": "smollm-135m",
     "draft": "xlstm-125m",
 }
+TICK = 5.0  # simulated seconds per control tick
+HORIZON = 30.0
+#: wall-clock latency budget a request must meet to count as attained
+#: (generous: CPU forward passes; the burst is what should dent it).
+SLO_WALL_SECONDS = 20.0
 
 
 def make_engine(arch: str, seed: int) -> Engine:
@@ -33,38 +47,109 @@ def make_engine(arch: str, seed: int) -> Engine:
     return Engine(mb, params, EngineConfig(max_slots=3, max_len=96))
 
 
+def bursty_trace():
+    """chat gets a 6x flash crowd mid-trace; draft stays steady."""
+    return generate_requests(
+        [
+            ModelTraffic("chat", FlashCrowd(0.4, flash_at=10.0,
+                                            flash_duration=10.0, multiplier=6.0),
+                         mean_prompt_len=8, mean_decode_len=5, len_sigma=0.3),
+            ModelTraffic("draft", ConstantRate(0.4),
+                         mean_prompt_len=6, mean_decode_len=4, len_sigma=0.3),
+        ],
+        seed=0,
+        horizon=HORIZON,
+    )
+
+
+def pump_measuring(srv: ClusterServer, submitted_wall: dict, latencies: dict,
+                   max_steps: int = 10_000) -> int:
+    """Drive all engines until drained, timestamping completions."""
+    seen = {wid: len(e.completed) for wid, e in srv.engines.items()}
+    total = 0
+    for _ in range(max_steps):
+        live = [(w, e) for w, e in srv.engines.items() if e.has_work]
+        if not live:
+            break
+        for wid, eng in live:
+            total += eng.step()
+            for c in eng.completed[seen.get(wid, 0):]:
+                if c.rid in submitted_wall:
+                    latencies[c.rid] = time.time() - submitted_wall[c.rid]
+            seen[wid] = len(eng.completed)
+    return total
+
+
 def main() -> None:
-    srv = ClusterServer(n_nodes=4, policy="heuristic")
+    srv = ClusterServer(
+        n_nodes=4,
+        policy="heuristic",
+        autoscaler=Autoscaler(AutoscalerConfig(
+            mode="slo", up_cooldown=0.0, down_cooldown=10.0, min_replicas=1,
+            max_replicas=3,
+        )),
+        # calibrate the perf model DOWN to these tiny CPU engines so the
+        # controller's queueing math matches what the replicas really do.
+        perf=PerfModel(calibration={
+            "TPUv5e-16x16-pod": DeviceThroughput(2_000.0, 50.0),
+        }),
+        engine_factory=lambda model, arch, wid: make_engine(
+            arch, seed=hash(wid) % 2**31
+        ),
+        autoscale_window=TICK,
+    )
 
-    # 1. initial deployment
+    # 1. seed deployment: ONE replica per model; the controller grows it.
     for model, arch in MODELS.items():
-        rep = srv.deploy(model, arch, n_replicas=2, profile_id=4)
+        rep = srv.deploy(model, arch, n_replicas=1, profile_id=4)
         print(f"deploy {model}: placed={rep.placed} nodes={rep.metrics.n_gpus}")
-
-    # 2. attach live engines
-    for model, arch in MODELS.items():
-        for wid in srv.replicas_of(model):
+        for wid in rep.placed:
             srv.attach_engine(wid, make_engine(arch, seed=hash(wid) % 2**31))
 
-    # 3. stream requests
-    rng = np.random.default_rng(0)
-    t0 = time.time()
-    for i in range(12):
-        model = list(MODELS)[i % len(MODELS)]
-        prompt = list(map(int, rng.integers(1, 255, size=int(rng.integers(3, 12)))))
-        wid = srv.submit(model, Request(rid=f"{model}-{i}", prompt=prompt,
-                                        max_new_tokens=6))
-        print(f"  routed {model}-{i} -> {wid}")
-    tokens = srv.pump()
-    done = [c for e in srv.engines.values() for c in e.completed]
-    print(f"served {len(done)} requests, {tokens} tokens "
-          f"in {time.time() - t0:.1f}s")
+    # 2-3. replay the bursty trace tick by tick under autoscale control.
+    trace = bursty_trace()
+    print(f"trace: {trace.n_requests} requests over {HORIZON:.0f}s "
+          f"(chat flash crowd at t=10..20)")
+    submitted_wall, latencies = {}, {}
+    served = 0
+    it = iter(trace.requests)
+    pending = next(it, None)
+    t = 0.0
+    while t < HORIZON:
+        tick_rids = []
+        while pending is not None and pending.time < t + TICK:
+            req = Request(rid=pending.rid,
+                          prompt=list(range(2, 2 + pending.prompt_len)),
+                          max_new_tokens=pending.decode_len)
+            submitted_wall[req.rid] = time.time()
+            tick_rids.append(req.rid)
+            srv.submit(pending.model, req, now=pending.time)
+            pending = next(it, None)
+        served += pump_measuring(srv, submitted_wall, latencies)
+        attain = {}
+        for m in MODELS:
+            rids = [r for r in tick_rids if r.startswith(m)]
+            # a quiet tick is a healthy tick, not a 0% one
+            attain[m] = (
+                sum(latencies.get(r, 1e9) <= SLO_WALL_SECONDS for r in rids)
+                / len(rids)
+            ) if rids else 1.0
+        rep = srv.autoscale(now=t + TICK, attainment=attain)
+        targets = {d.model: f"{d.current}->{d.target}" for d in rep.decisions}
+        print(f"  t={t + TICK:4.0f}s offered={{"
+              + ", ".join(f"{m}: {r:.2f}rps" for m, r in rep.offered_rps.items())
+              + f"}} replicas={targets} slo_attain={attain} "
+              f"nodes={srv.utilization()['nodes_used']}")
+        t += TICK
 
-    # 4. scale down + compaction, then serve again
-    srv.retire("draft", 1)
-    rep = srv.compact()
-    print(f"compaction: {rep.before.n_gpus} -> {rep.after.n_gpus} nodes "
-          f"({rep.plan.n_moves} moves)")
+    hit = sum(v <= SLO_WALL_SECONDS for v in latencies.values())
+    print(f"served {served} tokens, {len(latencies)} requests; "
+          f"overall SLO attainment {hit / max(len(latencies), 1):.2f}")
+
+    # 4. compaction, then serve again to prove the survivors are live.
+    cr = srv.compact()
+    print(f"compaction: {cr.before.n_gpus} -> {cr.after.n_gpus} nodes "
+          f"({cr.plan.n_moves} moves, committed={cr.committed})")
     srv.submit("chat", Request(rid="post-compact", prompt=[5, 4, 3],
                                max_new_tokens=4))
     srv.pump()

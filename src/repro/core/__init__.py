@@ -17,7 +17,13 @@ Public API:
     engine       — PlacementEngine: all approaches behind one interface
     events       — event-driven online simulation over timestamped traces
     fabric       — vectorized fleet-scale feasibility/scoring (JAX-batched)
+    traffic      — seeded request-arrival generators (demand axis)
+    perfmodel    — per-partition service rates (prefill/decode tokens/s)
+    autoscaler   — SLO-aware replica controller (offered load -> targets)
 """
+from .autoscaler import SLO, Autoscaler, AutoscalerConfig  # noqa: F401
 from .engine import EngineResult, PlacementEngine, available_policies  # noqa: F401
+from .perfmodel import PerfModel  # noqa: F401
 from .profiles import A100_80GB, H100_96GB, DeviceModel, Profile  # noqa: F401
 from .state import ClusterState, GPUState, Placement, Transaction, Workload  # noqa: F401
+from .traffic import ModelTraffic, RequestTrace, generate_requests  # noqa: F401

@@ -29,16 +29,22 @@ constraint, disruption-minutes spent migrating.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+import heapq
+import itertools
+from typing import Deque, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from .autoscaler import SLO, Autoscaler, ModelLoad
 from .engine import PlacementEngine
 from .fleetgen import FleetSpec, build_fleet  # noqa: F401  (re-exported API)
 from .migration import CommitPolicy
+from .perfmodel import PerfModel
 from .profiles import DeviceModel
 from .state import ClusterState, Workload
+from .traffic import RequestArrival, RequestShape, RequestTrace
 
 __all__ = [
     "Event",
@@ -48,6 +54,8 @@ __all__ = [
     "generate_trace",
     "TraceStats",
     "OnlineSimulator",
+    "ModelServiceSpec",
+    "DemandSimulator",
 ]
 
 #: default per-device profile pools for random arrivals (same spirit as
@@ -171,6 +179,29 @@ class TraceStats:
     disruption_seconds: float = 0.0  # summed per-replica unavailability
     migration_window_seconds: float = 0.0  # wall-clock spent migrating
     engine_seconds: float = 0.0
+    # -- demand-driven accounting (DemandSimulator only) --------------------
+    n_requests: int = 0
+    n_completed: int = 0
+    n_unserved: int = 0  # still queued when the simulation ended
+    n_autoscale_ticks: int = 0
+    n_scale_ups: int = 0  # replicas added by the autoscaler
+    n_scale_downs: int = 0  # replicas retired by the autoscaler
+    n_resizes: int = 0  # replicas re-deployed at a different profile
+    n_deploy_rejected: int = 0  # scale-up replicas the engine could not place
+    time_avg_queue_depth: float = 0.0
+    peak_queue_depth: int = 0
+    ttft_p50: float = 0.0
+    ttft_p95: float = 0.0
+    ttft_p99: float = 0.0
+    tpot_p50: float = 0.0
+    tpot_p95: float = 0.0
+    tpot_p99: float = 0.0
+    #: fraction of ALL arrived requests meeting their model's SLO (a request
+    #: never served counts as a miss — undersized fleets can't hide).
+    slo_attainment: float = 1.0
+    slo_attainment_by_model: Dict[str, float] = dataclasses.field(
+        default_factory=dict
+    )
 
     @property
     def disruption_minutes(self) -> float:
@@ -273,9 +304,15 @@ class OnlineSimulator:
         t_prev = 0.0
         for ev in self._events_with_compactions(trace):
             sample = self._sample()
-            acc += np.array(sample) * (ev.time - t_prev)
+            # Integration is clamped to [0, horizon]: an event past the
+            # horizon still mutates state (the replica really departs) but
+            # contributes no weight, so the final partial interval is counted
+            # exactly once for every time-averaged counter.
+            t_now = min(ev.time, trace.horizon)
+            if t_now > t_prev:
+                acc += np.array(sample) * (t_now - t_prev)
+                t_prev = t_now
             stats.peak_gpus_used = max(stats.peak_gpus_used, sample[0])
-            t_prev = ev.time
             if ev.kind == "arrival":
                 self._handle_arrival(ev, stats)
             elif ev.kind == "departure":
@@ -285,7 +322,7 @@ class OnlineSimulator:
             else:  # pragma: no cover
                 raise ValueError(f"unknown event kind {ev.kind!r}")
         sample = self._sample()
-        acc += np.array(sample) * (trace.horizon - t_prev)
+        acc += np.array(sample) * max(trace.horizon - t_prev, 0.0)
         stats.peak_gpus_used = max(stats.peak_gpus_used, sample[0])
         h = max(trace.horizon, 1e-9)
         (
@@ -357,3 +394,461 @@ class OnlineSimulator:
             stats.disruption_seconds += res.cost.downtime_seconds
             stats.migration_window_seconds += res.cost.duration_seconds
             self._busy_until = now + res.cost.duration_seconds
+
+
+# ---------------------------------------------------------------------------
+# demand-driven simulation: requests -> queues -> autoscaler -> engine
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ModelServiceSpec:
+    """How one served model's replicas are sized and judged online."""
+
+    model: str
+    profile_id: int  # default replica partition profile
+    device_kind: str = ""  # routing on mixed fleets (Workload.device_kind)
+    #: optional right-sizing candidates (profile ids, any order).  When set,
+    #: scale-ups pick the smallest profile whose capacity covers the
+    #: per-replica load, and steady-state ticks may *resize* (make-before-
+    #: break redeploy) one mismatched replica — MISO-style dynamic slicing.
+    profile_ladder: Tuple[int, ...] = ()
+    #: replicas deployed at t=0 (static baselines set this and no autoscaler).
+    initial_replicas: int = 0
+    slo: SLO = SLO()
+
+
+@dataclasses.dataclass
+class _Replica:
+    """Runtime state of one autoscaler-managed replica (single-server FIFO)."""
+
+    wid: str
+    model: str
+    profile_id: int
+    device: DeviceModel
+    current: Optional[RequestArrival] = None
+    busy_until: float = 0.0
+    draining: bool = False  # no new requests; removed at next completion
+
+
+class DemandSimulator(OnlineSimulator):
+    """Closes the loop from request traffic to placement.
+
+    Replays a ``RequestTrace`` as a discrete-event simulation: requests
+    queue per model, live replicas serve them (service times from the
+    ``PerfModel`` for each replica's actual partition profile), and every
+    ``autoscale_every`` seconds the ``Autoscaler`` turns the observed
+    offered load / queue depths / SLO attainment into replica targets that
+    are applied through the ``PlacementEngine`` — deploys admit, retires
+    drain, and any periodic compact/reconfigure still rides the engine's
+    plan/score/commit control plane (``CommitPolicy`` gates migrations).
+
+    Each replica serves one request at a time (a G/G/c queue per model);
+    TTFT is queue wait + prefill, TPOT the profile's decode pace.  After the
+    horizon no new requests arrive and no control ticks fire, but in-flight
+    queues drain to completion so every served request is accounted;
+    time-averaged metrics integrate over ``[0, horizon]`` only.
+    """
+
+    def __init__(
+        self,
+        state: ClusterState,
+        engine: PlacementEngine,
+        specs: Sequence[ModelServiceSpec],
+        autoscaler: Optional[Autoscaler] = None,
+        perf: Optional[PerfModel] = None,
+        autoscale_every: float = 5.0,
+        compact_every: Optional[float] = None,
+        reconfigure_every: Optional[float] = None,
+        migration_budget: Optional[int] = None,
+    ):
+        super().__init__(
+            state,
+            engine,
+            compact_every=compact_every,
+            migration_budget=migration_budget,
+            reconfigure_every=reconfigure_every,
+        )
+        self.specs: Dict[str, ModelServiceSpec] = {s.model: s for s in specs}
+        self.autoscaler = autoscaler
+        self.perf = perf or PerfModel()
+        self.autoscale_every = autoscale_every
+        self._wid_counter = itertools.count()
+        self._reps: Dict[str, Dict[str, _Replica]] = {
+            m: {} for m in self.specs
+        }
+        self._queues: Dict[str, Deque[RequestArrival]] = {
+            m: collections.deque() for m in self.specs
+        }
+        #: per-model counters over the current control window.
+        self._win: Dict[str, Dict[str, float]] = {
+            m: self._fresh_window() for m in self.specs
+        }
+        #: running request shapes (capacity estimation; defaults until seen).
+        self._shapes: Dict[str, RequestShape] = {
+            m: RequestShape() for m in self.specs
+        }
+        self._arrived: Dict[str, int] = {m: 0 for m in self.specs}
+        self._hits: Dict[str, int] = {m: 0 for m in self.specs}
+        self._ttfts: List[float] = []
+        self._tpots: List[float] = []
+        self._last_tick = 0.0
+        #: live event heap + tie-break counter (bound for real in run()).
+        self._heap: List[Tuple[float, int, str, object]] = []
+        self._seq = itertools.count()
+        #: fleet metrics only change on placement mutations; request/complete
+        #: events reuse the cached sample (O(1) vs O(fleet) per event).
+        self._fleet_dirty = True
+        self._fleet_cache: Tuple[int, int, int, float] = (0, 0, 0, 0.0)
+
+    def _fleet_sample(self) -> Tuple[int, int, int, float]:
+        if self._fleet_dirty:
+            self._fleet_cache = self._sample()
+            self._fleet_dirty = False
+        return self._fleet_cache
+
+    @staticmethod
+    def _fresh_window() -> Dict[str, float]:
+        return {"arrived": 0, "completed": 0, "hits": 0}
+
+    # -- helpers ------------------------------------------------------------
+    def _device_for(self, kind: str) -> DeviceModel:
+        for gpu in self.state.gpus.values():
+            if not kind or gpu.device.name == kind:
+                return gpu.device
+        raise ValueError(f"no device of kind {kind!r} in the fleet")
+
+    def _mean_lens(self, model: str) -> Tuple[int, int]:
+        return self._shapes[model].means()
+
+    def _total_queue_depth(self) -> int:
+        return sum(len(q) for q in self._queues.values())
+
+    def _live_replicas(self, model: str) -> List[_Replica]:
+        return [r for r in self._reps[model].values() if not r.draining]
+
+    def _target_utilization(self) -> float:
+        if self.autoscaler is not None:
+            return self.autoscaler.config.target_utilization
+        return 0.7
+
+    def _choose_profile(
+        self, spec: ModelServiceSpec, offered_rps: float, target: int
+    ) -> int:
+        """Right-size: smallest ladder profile covering per-replica load."""
+        if not spec.profile_ladder:
+            return spec.profile_id
+        device = self._device_for(spec.device_kind)
+        mean_p, mean_d = self._mean_lens(spec.model)
+        per_rep = offered_rps / max(target, 1)
+        rho = self._target_utilization()
+        ladder = sorted(
+            spec.profile_ladder,
+            key=lambda pid: self.perf.capacity_rps(device, pid, mean_p, mean_d),
+        )
+        for pid in ladder:
+            if self.perf.capacity_rps(device, pid, mean_p, mean_d) * rho >= per_rep:
+                return pid
+        return ladder[-1]  # even the biggest slice is short: take it
+
+    # -- replica lifecycle --------------------------------------------------
+    def _deploy_replicas(
+        self, model: str, n: int, profile_id: int, stats: TraceStats
+    ) -> List[_Replica]:
+        spec = self.specs[model]
+        news = [
+            Workload(
+                wid=f"{model}#a{next(self._wid_counter)}",
+                profile_id=profile_id,
+                model=model,
+                device_kind=spec.device_kind,
+            )
+            for _ in range(n)
+        ]
+        res = self.engine.deploy(self.state, news)
+        self._fleet_dirty = True
+        stats.engine_seconds += res.seconds
+        rejected = {w.wid for w in res.pending}
+        stats.n_deploy_rejected += len(rejected)
+        for wid in rejected:
+            self.state.workloads.pop(wid, None)
+        placed: List[_Replica] = []
+        for w in news:
+            if w.wid in rejected:
+                continue
+            gid = self.state.gpu_of(w.wid)
+            rep = _Replica(
+                wid=w.wid,
+                model=model,
+                profile_id=profile_id,
+                device=self.state.gpus[gid].device,
+            )
+            self._reps[model][w.wid] = rep
+            placed.append(rep)
+        return placed
+
+    def _remove_replica(self, rep: _Replica) -> None:
+        self._fleet_dirty = True
+        gid = self.state.gpu_of(rep.wid)
+        if gid is not None:
+            self.state.remove(rep.wid, gid)
+        self.state.workloads.pop(rep.wid, None)
+        self._reps[rep.model].pop(rep.wid, None)
+
+    def _retire_replicas(self, model: str, n: int, stats: TraceStats) -> None:
+        """Idle replicas go now; busy ones drain (removed at completion)."""
+        victims = sorted(
+            self._live_replicas(model),
+            key=lambda r: (r.current is not None, r.wid),
+        )[:n]
+        for rep in victims:
+            stats.n_scale_downs += 1
+            if rep.current is None:
+                self._remove_replica(rep)
+            else:
+                rep.draining = True
+
+    # -- request flow -------------------------------------------------------
+    def _dispatch(self, model: str, now: float, heap, seq) -> None:
+        q = self._queues[model]
+        if not q:
+            return
+        free = sorted(
+            (r for r in self._reps[model].values()
+             if r.current is None and not r.draining),
+            key=lambda r: r.wid,
+        )
+        for rep in free:
+            if not q:
+                break
+            req = q.popleft()
+            prefill_s, decode_s = self.perf.service_seconds(
+                rep.device, rep.profile_id, req.prompt_len, req.decode_len
+            )
+            ttft = (now - req.time) + prefill_s
+            tpot = self.perf.tpot_seconds(rep.device, rep.profile_id)
+            rep.current = req
+            rep.busy_until = now + prefill_s + decode_s
+            heapq.heappush(
+                heap,
+                (rep.busy_until, next(seq), "complete",
+                 (rep.wid, model, req, ttft, tpot)),
+            )
+
+    def _handle_request(self, req: RequestArrival, now: float,
+                        stats: TraceStats, heap, seq) -> None:
+        stats.n_requests += 1
+        self._arrived[req.model] += 1
+        self._shapes[req.model].add(req.prompt_len, req.decode_len)
+        self._win[req.model]["arrived"] += 1
+        self._queues[req.model].append(req)
+        self._dispatch(req.model, now, heap, seq)
+
+    def _handle_complete(self, payload, now: float, stats: TraceStats,
+                         heap, seq) -> None:
+        wid, model, req, ttft, tpot = payload
+        rep = self._reps[model].get(wid)
+        if rep is None or rep.current is not req:
+            return  # stale: the replica was evicted and the request requeued
+        rep.current = None
+        stats.n_completed += 1
+        self._ttfts.append(ttft)
+        self._tpots.append(tpot)
+        slo = self.specs[model].slo
+        hit = ttft <= slo.ttft_seconds and tpot <= slo.tpot_seconds
+        self._win[model]["completed"] += 1
+        self._win[model]["hits"] += hit
+        self._hits[model] += hit
+        if rep.draining:
+            self._remove_replica(rep)
+        else:
+            self._dispatch(model, now, heap, seq)
+
+    # -- control tick -------------------------------------------------------
+    def _observations(self, interval: float) -> List[ModelLoad]:
+        obs: List[ModelLoad] = []
+        for model in sorted(self.specs):
+            spec = self.specs[model]
+            win = self._win[model]
+            mean_p, mean_d = self._mean_lens(model)
+            live = self._live_replicas(model)
+            if live:
+                cap = float(np.mean([
+                    self.perf.capacity_rps(r.device, r.profile_id, mean_p, mean_d)
+                    for r in live
+                ]))
+            else:
+                cap = self.perf.capacity_rps(
+                    self._device_for(spec.device_kind), spec.profile_id,
+                    mean_p, mean_d,
+                )
+            if win["completed"]:
+                att = win["hits"] / win["completed"]
+            else:
+                # Nothing finished this window: healthy if nothing waits.
+                att = 1.0 if not self._queues[model] else 0.0
+            obs.append(ModelLoad(
+                model=model,
+                offered_rps=win["arrived"] / max(interval, 1e-9),
+                capacity_rps=cap,
+                replicas=len(live),
+                queue_depth=len(self._queues[model]),
+                slo_attainment=att,
+                slo=spec.slo,
+            ))
+        return obs
+
+    def _maybe_resize(self, model: str, obs: ModelLoad, now: float,
+                      stats: TraceStats, heap, seq) -> None:
+        """Make-before-break conversion of ONE mismatched replica per tick."""
+        spec = self.specs[model]
+        if not spec.profile_ladder or self.autoscaler is None:
+            return
+        live = self._live_replicas(model)
+        if not live:
+            return
+        want = self._choose_profile(spec, obs.offered_rps, len(live))
+        victim = next(
+            (r for r in sorted(live, key=lambda r: r.wid)
+             if r.profile_id != want and r.current is None),
+            None,
+        )
+        if victim is None:
+            return
+        if not self._deploy_replicas(model, 1, want, stats):
+            return  # replacement did not fit: keep the old slice
+        self._remove_replica(victim)
+        stats.n_resizes += 1
+        self._dispatch(model, now, heap, seq)
+
+    def _autoscale_tick(self, now: float, stats: TraceStats, heap, seq) -> None:
+        stats.n_autoscale_ticks += 1
+        interval = now - self._last_tick
+        self._last_tick = now
+        obs_list = self._observations(interval)
+        if self.autoscaler is not None:
+            for dec, obs in zip(self.autoscaler.tick(now, obs_list), obs_list):
+                spec = self.specs[dec.model]
+                if dec.delta > 0:
+                    pid = self._choose_profile(spec, obs.offered_rps, dec.target)
+                    placed = self._deploy_replicas(
+                        dec.model, dec.delta, pid, stats
+                    )
+                    stats.n_scale_ups += len(placed)
+                    self._dispatch(dec.model, now, heap, seq)
+                elif dec.delta < 0:
+                    self._retire_replicas(dec.model, -dec.delta, stats)
+                else:
+                    self._maybe_resize(dec.model, obs, now, stats, heap, seq)
+        for model in self._win:
+            self._win[model] = self._fresh_window()
+
+    def _handle_plan_verb(self, verb: str, stats: TraceStats, now: float) -> None:
+        """Plan verbs may evict replicas (baseline reconfigure replays):
+        requeue their in-flight request and forget the ghost."""
+        super()._handle_plan_verb(verb, stats, now)
+        self._fleet_dirty = True
+        for model, reps in self._reps.items():
+            requeued = False
+            for wid in [w for w in reps if w not in self.state.workloads]:
+                rep = reps.pop(wid)
+                if rep.current is not None:
+                    self._queues[model].appendleft(rep.current)
+                    requeued = True
+            if requeued:
+                self._dispatch(model, now, self._heap, self._seq)
+
+    # -- main loop ----------------------------------------------------------
+    def run(self, traffic: RequestTrace) -> TraceStats:  # type: ignore[override]
+        unknown = set(r.model for r in traffic.requests) - set(self.specs)
+        if unknown:
+            raise ValueError(f"traffic for unknown models: {sorted(unknown)}")
+        stats = TraceStats(
+            policy=self.engine.policy_name,
+            horizon=traffic.horizon,
+            time_avg_gpus_used=0.0,
+            time_avg_compute_waste=0.0,
+            time_avg_memory_waste=0.0,
+            time_avg_mem_occupancy=0.0,
+            peak_gpus_used=0,
+        )
+        horizon = traffic.horizon
+        seq = self._seq = itertools.count()
+        heap: List[Tuple[float, int, str, object]] = [
+            (r.time, next(seq), "request", r) for r in traffic.requests
+        ]
+        heapq.heapify(heap)
+        self._heap = heap  # plan-verb eviction hook re-dispatches through it
+        periods = {"compact": self.compact_every,
+                   "reconfigure": self.reconfigure_every}
+        for kind, period in periods.items():
+            if period and kind in self.engine.policy.supports:
+                heapq.heappush(heap, (period, next(seq), kind, None))
+        if self.autoscaler is not None and self.autoscale_every:
+            heapq.heappush(
+                heap, (self.autoscale_every, next(seq), "autoscale", None)
+            )
+        for model in sorted(self.specs):
+            spec = self.specs[model]
+            if spec.initial_replicas:
+                self._deploy_replicas(
+                    model, spec.initial_replicas, spec.profile_id, stats
+                )
+        acc = np.zeros(5)  # fleet sample (4) + total queue depth
+        t_prev = 0.0
+        while heap:
+            t, _, kind, payload = heapq.heappop(heap)
+            qdepth = self._total_queue_depth()
+            sample = self._fleet_sample() + (qdepth,)
+            t_now = min(t, horizon)
+            if t_now > t_prev:
+                acc += np.array(sample) * (t_now - t_prev)
+                t_prev = t_now
+            stats.peak_gpus_used = max(stats.peak_gpus_used, sample[0])
+            stats.peak_queue_depth = max(stats.peak_queue_depth, qdepth)
+            if kind == "request":
+                self._handle_request(payload, t, stats, heap, seq)
+            elif kind == "complete":
+                self._handle_complete(payload, t, stats, heap, seq)
+            elif kind == "autoscale":
+                if t < horizon:
+                    self._autoscale_tick(t, stats, heap, seq)
+                    nxt = t + self.autoscale_every
+                    if nxt < horizon:
+                        heapq.heappush(heap, (nxt, next(seq), kind, None))
+            elif kind in ("compact", "reconfigure"):
+                if t < horizon:
+                    self._handle_plan_verb(kind, stats, t)
+                    nxt = t + periods[kind]
+                    if nxt < horizon:
+                        heapq.heappush(heap, (nxt, next(seq), kind, None))
+            else:  # pragma: no cover
+                raise ValueError(f"unknown demand event kind {kind!r}")
+        sample = self._fleet_sample() + (self._total_queue_depth(),)
+        acc += np.array(sample) * max(horizon - t_prev, 0.0)
+        stats.peak_gpus_used = max(stats.peak_gpus_used, sample[0])
+        stats.peak_queue_depth = max(stats.peak_queue_depth, sample[4])
+        h = max(horizon, 1e-9)
+        (
+            stats.time_avg_gpus_used,
+            stats.time_avg_compute_waste,
+            stats.time_avg_memory_waste,
+            stats.time_avg_mem_occupancy,
+            stats.time_avg_queue_depth,
+        ) = (acc / h).tolist()
+        stats.n_unserved = self._total_queue_depth()
+        for model in sorted(self.specs):
+            arrived = self._arrived[model]
+            stats.slo_attainment_by_model[model] = (
+                self._hits[model] / arrived if arrived else 1.0
+            )
+        total_arrived = sum(self._arrived.values())
+        stats.slo_attainment = (
+            sum(self._hits.values()) / total_arrived if total_arrived else 1.0
+        )
+        if self._ttfts:
+            stats.ttft_p50, stats.ttft_p95, stats.ttft_p99 = [
+                float(v) for v in np.percentile(self._ttfts, [50, 95, 99])
+            ]
+            stats.tpot_p50, stats.tpot_p95, stats.tpot_p99 = [
+                float(v) for v in np.percentile(self._tpots, [50, 95, 99])
+            ]
+        return stats

@@ -1,0 +1,142 @@
+"""Per-partition service-rate model: what a placed replica can actually serve.
+
+Placement decides *where* a replica lives; this module decides *how fast* it
+runs there, closing the loop between slice geometry and request traffic.
+LLM inference has two phases with different bottlenecks:
+
+  * **prefill** is compute-bound  -> throughput scales with the partition's
+    share of compute slices (MIG SMs / pod rows);
+  * **decode** is bandwidth-bound -> throughput scales with the partition's
+    share of memory slices (MIG memory carries its HBM controllers with it,
+    so bandwidth is proportional to memory slices — the MISO observation).
+
+``PerfModel.rates(device, profile_id)`` therefore maps a whole-device
+throughput pair to per-profile (prefill tokens/s, decode tokens/s) via the
+profile's compute/memory fractions, optionally raised to a
+``parallel_efficiency`` exponent <= 1 (sublinear scaling of small slices;
+still monotone: a bigger slice never serves slower).  Whole-device numbers
+come from a built-in table, a user calibration dict, or a ``calibrator``
+hook — e.g. a roofline pass (``benchmarks/roofline.py``) measuring the real
+hardware, which is why the hook takes the ``DeviceModel`` itself.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Tuple
+
+from .profiles import DeviceModel
+
+__all__ = [
+    "DeviceThroughput",
+    "DEVICE_THROUGHPUT",
+    "PerfModel",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceThroughput:
+    """Aggregate serving throughput of one WHOLE device (all slices)."""
+
+    prefill_tokens_per_s: float
+    decode_tokens_per_s: float
+
+    def scaled(self, prefill_frac: float, decode_frac: float) -> "DeviceThroughput":
+        return DeviceThroughput(
+            prefill_tokens_per_s=self.prefill_tokens_per_s * prefill_frac,
+            decode_tokens_per_s=self.decode_tokens_per_s * decode_frac,
+        )
+
+
+#: built-in whole-device throughputs for a mid-size (~10B-class) serving
+#: model — deliberately round planning numbers, not measurements; calibrate
+#: with real ones via ``PerfModel(calibration=...)`` or the roofline hook.
+DEVICE_THROUGHPUT: Dict[str, DeviceThroughput] = {
+    "A100-80GB": DeviceThroughput(20_000.0, 2_000.0),
+    "H100-96GB": DeviceThroughput(50_000.0, 4_500.0),
+    # a 16x16 v5e pod aggregates 256 chips; decode is per-pod aggregate.
+    "TPUv5e-16x16-pod": DeviceThroughput(400_000.0, 60_000.0),
+}
+
+#: fallback for unknown devices: scale a conservative per-memory-GB rate.
+_FALLBACK_PER_GB = DeviceThroughput(150.0, 15.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class PerfModel:
+    """Profile -> service-rate mapping with optional calibration.
+
+    ``calibration`` overrides the built-in table per device name;
+    ``calibrator`` is consulted (once per device, cached) when neither table
+    has the device — wire a roofline measurement pass here.
+    """
+
+    calibration: Optional[Dict[str, DeviceThroughput]] = None
+    calibrator: Optional[Callable[[DeviceModel], DeviceThroughput]] = None
+    #: slice-count scaling exponent in (0, 1]: 1.0 = linear; lower models
+    #: sublinear parallel efficiency of large partitions.  Monotone for any
+    #: value > 0 (bigger fraction => >= throughput).
+    parallel_efficiency: float = 1.0
+
+    def __post_init__(self) -> None:
+        if not 0.0 < self.parallel_efficiency <= 1.0:
+            raise ValueError(
+                f"parallel_efficiency must be in (0, 1], "
+                f"got {self.parallel_efficiency}"
+            )
+
+    # -- whole-device -------------------------------------------------------
+    def device_throughput(self, device: DeviceModel) -> DeviceThroughput:
+        if self.calibration and device.name in self.calibration:
+            return self.calibration[device.name]
+        if device.name in DEVICE_THROUGHPUT:
+            return DEVICE_THROUGHPUT[device.name]
+        cache = self.__dict__.setdefault("_hook_cache", {})
+        if device.name in cache:
+            return cache[device.name]
+        if self.calibrator is not None:
+            tp = self.calibrator(device)
+        else:
+            gb = float(getattr(device, "mem_per_slice_gb", 10) or 10)
+            total_gb = gb * device.n_memory_slices
+            tp = _FALLBACK_PER_GB.scaled(total_gb, total_gb)
+        cache[device.name] = tp
+        return tp
+
+    # -- per-profile --------------------------------------------------------
+    def rates(self, device: DeviceModel, profile_id: int) -> Tuple[float, float]:
+        """(prefill tokens/s, decode tokens/s) of ``profile_id`` on ``device``."""
+        prof = device.profile(profile_id)
+        base = self.device_throughput(device)
+        e = self.parallel_efficiency
+        cfrac = (prof.compute_slices / device.n_gpu_slices) ** e
+        mfrac = (prof.memory_slices / device.n_memory_slices) ** e
+        return (
+            base.prefill_tokens_per_s * cfrac,
+            base.decode_tokens_per_s * mfrac,
+        )
+
+    def service_seconds(
+        self, device: DeviceModel, profile_id: int, prompt_len: int, decode_len: int
+    ) -> Tuple[float, float]:
+        """(prefill seconds, decode seconds) for one request on the profile."""
+        prefill_tps, decode_tps = self.rates(device, profile_id)
+        return prompt_len / prefill_tps, decode_len / decode_tps
+
+    def tpot_seconds(self, device: DeviceModel, profile_id: int) -> float:
+        """Steady-state time-per-output-token of the profile."""
+        _, decode_tps = self.rates(device, profile_id)
+        return 1.0 / decode_tps
+
+    def capacity_rps(
+        self,
+        device: DeviceModel,
+        profile_id: int,
+        mean_prompt_len: int,
+        mean_decode_len: int,
+    ) -> float:
+        """Sustainable requests/s of ONE replica on the profile, at the
+        model's mean request shape (the autoscaler's denominator)."""
+        prefill_s, decode_s = self.service_seconds(
+            device, profile_id, mean_prompt_len, mean_decode_len
+        )
+        return 1.0 / max(prefill_s + decode_s, 1e-12)

@@ -32,19 +32,24 @@ drained replicas resume last — the ``ExecutionReport`` records every step.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import itertools
-from typing import Any, Dict, List, Optional, Tuple, Union
+import time
+from typing import Any, Callable, Deque, Dict, List, Optional, Tuple, Union
 
 import jax
 
 from ..configs import get_config
+from ..core.autoscaler import Autoscaler, ModelLoad, ScaleDecision
 from ..core.engine import PlacementEngine
 from ..core.metrics import PlacementMetrics, evaluate
 from ..core.migration import CommitPolicy, MigrationCostModel, MigrationPlan, PlanCost
+from ..core.perfmodel import PerfModel
 from ..core.profiles import DeviceModel, Profile
 from ..core.state import ClusterState, Workload
 from ..core.tpu_profiles import TPU_V5E_POD, profile_for_chips
+from ..core.traffic import RequestShape
 from ..models import bundle
 from .kvcache import live_kv_bytes
 
@@ -57,6 +62,7 @@ __all__ = [
     "PlacementReport",
     "ExecutionReport",
     "MigrationStep",
+    "AutoscaleReport",
 ]
 
 
@@ -136,6 +142,22 @@ class DeployReport:
 
 
 @dataclasses.dataclass
+class AutoscaleReport:
+    """One ``ClusterServer.autoscale()`` control tick."""
+
+    decisions: List[ScaleDecision]
+    offered_rps: Dict[str, float]
+    deployed: Dict[str, List[str]] = dataclasses.field(default_factory=dict)
+    retired: Dict[str, List[str]] = dataclasses.field(default_factory=dict)
+    #: scale-up replicas the engine could not place this tick.
+    rejected: Dict[str, int] = dataclasses.field(default_factory=dict)
+
+    @property
+    def scaled(self) -> bool:
+        return bool(self.deployed or self.retired)
+
+
+@dataclasses.dataclass
 class PlacementReport:
     before: PlacementMetrics
     after: PlacementMetrics
@@ -171,6 +193,10 @@ class ClusterServer:
         commit: Union[str, CommitPolicy] = "always",
         cost_model: Optional[MigrationCostModel] = None,
         plan_deploys: bool = True,
+        autoscaler: Optional[Autoscaler] = None,
+        perf: Optional[PerfModel] = None,
+        engine_factory: Optional[Callable[[str, str, str], Any]] = None,
+        autoscale_window: float = 30.0,
     ):
         self.device = device
         # plan_deploys=True gives DeployReport a scored plan; turn it off on
@@ -198,6 +224,21 @@ class ClusterServer:
         self._footprints: Dict[str, Tuple[int, int]] = {}
         #: (arch, max_batch, max_len) -> parts, so repeat deploys stay cheap
         self._parts_cache: Dict[Tuple[str, int, int], Tuple[int, int]] = {}
+        # -- demand loop (autoscale) ----------------------------------------
+        self.autoscaler = autoscaler
+        self.perf = perf or PerfModel()
+        #: (model, arch, wid) -> live Engine, attached to scale-up replicas.
+        self.engine_factory = engine_factory
+        self.autoscale_window = autoscale_window
+        #: model -> (arch, profile_id) remembered from the first deploy, so
+        #: autoscale() knows how to mint more replicas of the model.
+        self._model_specs: Dict[str, Tuple[str, Optional[int]]] = {}
+        #: model -> recent submit() timestamps (offered-load window).
+        self._req_times: Dict[str, Deque[float]] = collections.defaultdict(
+            collections.deque
+        )
+        #: model -> running request shape for capacity estimation.
+        self._req_shapes: Dict[str, RequestShape] = {}
 
     # -- migration pricing: live bytes per replica --------------------------
     def _replica_bytes(self, wid: str) -> Optional[int]:
@@ -239,6 +280,7 @@ class ClusterServer:
                 self._parts_cache[key] = parts
             total = int(sum(parts) * (1.0 + FOOTPRINT_HEADROOM))
             profile_id = profile_for_chips(total, self.device).profile_id
+        self._model_specs.setdefault(model, (arch, profile_id))
         news = []
         for _ in range(n_replicas):
             wid = f"{model}/r{next(self._counter)}"
@@ -261,8 +303,19 @@ class ClusterServer:
 
     # ---------------------------------------------------------------- retire
     def retire(self, model: str, n: int = 1) -> List[str]:
-        """Remove up to n replicas of ``model`` (scale-down)."""
-        victims = [w for w, (m, _) in self.replicas.items() if m == model][:n]
+        """Remove up to n replicas of ``model`` (scale-down).
+
+        Replicas whose attached engine is idle go first; a busy victim is
+        pumped dry before teardown so no in-flight request is lost."""
+        candidates = [w for w, (m, _) in self.replicas.items() if m == model]
+        candidates.sort(
+            key=lambda w: (getattr(self.engines.get(w), "has_work", False), w)
+        )
+        victims = candidates[:n]
+        for wid in victims:
+            eng = self.engines.get(wid)
+            while eng is not None and getattr(eng, "has_work", False):
+                eng.step()
         for wid in victims:
             gid = self.state.gpu_of(wid)
             if gid is not None:
@@ -394,12 +447,99 @@ class ClusterServer:
     def attach_engine(self, wid: str, engine) -> None:
         self.engines[wid] = engine
 
-    def submit(self, model: str, request) -> str:
-        """Route a request to a replica's engine; returns the replica wid."""
+    def submit(self, model: str, request, now: Optional[float] = None) -> str:
+        """Route a request to a replica's engine; returns the replica wid.
+
+        Every submit is logged into the model's offered-load window so
+        ``autoscale()`` can derive arrival rates; pass ``now`` to drive a
+        simulated clock (defaults to wall time)."""
+        ts = time.time() if now is None else now
+        times = self._req_times[model]
+        times.append(ts)
+        # keep the log bounded to the window even if autoscale() never runs
+        while times and times[0] < ts - self.autoscale_window:
+            times.popleft()
+        self._req_shapes.setdefault(model, RequestShape()).add(
+            len(getattr(request, "prompt", ())),
+            int(getattr(request, "max_new_tokens", 0)),
+        )
         wid = self.route(model)
         if wid in self.engines:
             self.engines[wid].submit(request)
         return wid
+
+    # -------------------------------------------------------------- autoscale
+    def _offered_rps(self, model: str, now: float) -> float:
+        """Arrival rate over the trailing ``autoscale_window`` seconds."""
+        times = self._req_times[model]
+        while times and times[0] < now - self.autoscale_window:
+            times.popleft()
+        return len(times) / max(self.autoscale_window, 1e-9)
+
+    def _queue_depth(self, model: str) -> int:
+        return sum(
+            len(getattr(self.engines[w], "queue", ()))
+            for w in self.replicas_of(model)
+            if w in self.engines
+        )
+
+    def autoscale(
+        self,
+        now: Optional[float] = None,
+        attainment: Optional[Dict[str, float]] = None,
+    ) -> AutoscaleReport:
+        """One control tick of the demand loop over LIVE engines.
+
+        Measures each deployed model's offered load from its recent
+        ``submit()`` history, sizes replica capacity with the perf model,
+        and applies the ``Autoscaler``'s decisions through ``deploy`` /
+        ``retire`` — the same engine-gated paths a human operator would use.
+        Newly placed replicas get an engine from ``engine_factory`` when one
+        is configured.  ``attainment`` (model -> fraction meeting SLO over
+        the caller's window) feeds the controller's slo mode; callers that
+        do not measure latency omit it and run target-utilization sizing.
+        """
+        if self.autoscaler is None:
+            raise RuntimeError("ClusterServer built without an autoscaler")
+        ts = time.time() if now is None else now
+        observations: List[ModelLoad] = []
+        for model in sorted(self._model_specs):
+            arch, profile_id = self._model_specs[model]
+            mean_p, mean_d = self._req_shapes.get(
+                model, RequestShape()
+            ).means()
+            observations.append(ModelLoad(
+                model=model,
+                offered_rps=self._offered_rps(model, ts),
+                capacity_rps=self.perf.capacity_rps(
+                    self.device, profile_id, mean_p, mean_d
+                ),
+                replicas=len(self.replicas_of(model)),
+                queue_depth=self._queue_depth(model),
+                slo_attainment=(attainment or {}).get(model, 1.0),
+            ))
+        decisions = self.autoscaler.tick(ts, observations)
+        report = AutoscaleReport(
+            decisions=decisions,
+            offered_rps={o.model: o.offered_rps for o in observations},
+        )
+        for dec in decisions:
+            if dec.delta > 0:
+                arch, profile_id = self._model_specs[dec.model]
+                rep = self.deploy(
+                    dec.model, arch, n_replicas=dec.delta, profile_id=profile_id
+                )
+                report.deployed[dec.model] = rep.placed
+                if rep.pending:
+                    report.rejected[dec.model] = len(rep.pending)
+                if self.engine_factory is not None:
+                    for wid in rep.placed:
+                        self.attach_engine(
+                            wid, self.engine_factory(dec.model, arch, wid)
+                        )
+            elif dec.delta < 0:
+                report.retired[dec.model] = self.retire(dec.model, -dec.delta)
+        return report
 
     def pump(self, max_steps: int = 10_000) -> int:
         """Drive all attached engines until drained; returns tokens produced."""

@@ -71,6 +71,27 @@ class TestDeterministicTrace:
         assert len(state.used_gpus()) == 2
         assert _placed_wids(state) == {"w1", "w3", "w4"}
 
+    def test_time_averages_clamp_to_horizon(self):
+        """Events past the horizon must not perturb time-averaged metrics:
+        integration covers exactly [0, horizon], with the final partial
+        interval counted once (regression: the last-event-to-horizon tail
+        used to go negative when an event landed beyond the horizon)."""
+        state = ClusterState.homogeneous(2)
+        trace = Trace(
+            events=[
+                Event(time=2.0, kind="arrival", workloads=(Workload("a", 5),)),
+                # departure beyond the horizon: state change, zero weight.
+                Event(time=15.0, kind="departure", wids=("a",)),
+            ],
+            horizon=10.0,
+        )
+        stats = OnlineSimulator(state, PlacementEngine("rule_based")).run(trace)
+        # 0 GPUs on [0,2), 1 on [2,10) -> 0.8; the t=15 departure still ran.
+        assert stats.time_avg_gpus_used == pytest.approx(0.8)
+        assert stats.time_avg_mem_occupancy == pytest.approx(0.8 * 4 / 16)
+        assert stats.n_departed == 1
+        assert state.used_gpus() == []
+
     def test_periodic_compaction_injection(self):
         state = ClusterState.homogeneous(3)
         trace = Trace(
