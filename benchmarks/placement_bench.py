@@ -37,17 +37,31 @@ fabric-native frag_aware policy, plus a short online trace per policy.
 
 Every run also emits a machine-readable ``BENCH_placement.json`` (disable
 with ``--json ''``) so the repo's perf trajectory is tracked across PRs.
+The JSON is strict (non-finite floats serialize as ``null``, never ``NaN``).
+
+``--telemetry`` opts the run into the ``repro.obs`` subsystem: engine verbs
+are span-traced, planner-latency p50/p95/p99 per verb land in the JSON
+report (``planner_latency`` section), and the run writes a JSONL span/event
+dump plus a Prometheus text exposition next to the report (render the JSONL
+with ``python -m repro.obs.report``).
+
+Human-readable tables go through the std ``logging`` module on stderr
+(``--verbose`` adds debug/timing chatter), so stdout stays clean for
+machine consumers.
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
 import json
+import logging
 import math
 import os
+import sys
 import time
 from typing import Dict, Optional, Sequence
 
+from repro import obs
 from repro.core import metrics
 from repro.core.autoscaler import SLO, Autoscaler, AutoscalerConfig
 from repro.core.engine import PlacementEngine
@@ -63,6 +77,10 @@ from repro.core.profiles import A100_80GB
 from repro.core.simulator import TestCase, generate_test_case
 from repro.core.tpu_profiles import TPU_V5E_POD
 from repro.core.traffic import DiurnalRate, FlashCrowd, ModelTraffic, generate_requests
+
+#: human-readable output channel (tables, timings) — stderr via logging, so
+#: stdout never interleaves human text with telemetry/JSON consumers.
+log = logging.getLogger("repro.bench")
 
 APPROACHES = {
     "initial": ("first_fit", "load_balanced", "rule_based", "frag_aware",
@@ -145,14 +163,14 @@ def normalize(table: Dict[str, Dict[str, float]]) -> Dict[str, Dict[str, float]]
 def print_table(case: str, n_gpus: int, table: Dict[str, Dict[str, float]]) -> None:
     norm = normalize(table)
     keys = list(next(iter(table.values())).keys())
-    print(f"\n== {case} @ {n_gpus} GPUs (mean over cases; normalized in []) ==")
+    log.info(f"\n== {case} @ {n_gpus} GPUs (mean over cases; normalized in []) ==")
     header = "approach".ljust(15) + "".join(k[:14].rjust(16) for k in keys)
-    print(header)
+    log.info(header)
     for a, row in table.items():
         line = a.ljust(15)
         for k in keys:
             line += f"{row[k]:9.3f}[{norm[a][k]:4.2f}]".rjust(16)
-        print(line)
+        log.info(line)
 
 
 # ---------------------------------------------------------------------------
@@ -228,12 +246,12 @@ def run_trace(
 
 
 def print_trace_table(table: Dict[str, Dict[str, float]], header: str) -> None:
-    print(f"\n== online trace: {header} ==")
+    log.info(f"\n== online trace: {header} ==")
     cols = list(next(iter(table.values())).keys())
     width = max(24, max(len(a) for a in table) + 2)
-    print("policy".ljust(width) + "".join(_TRACE_COLS[c].rjust(13) for c in cols))
+    log.info("policy".ljust(width) + "".join(_TRACE_COLS[c].rjust(13) for c in cols))
     for a, row in table.items():
-        print(a.ljust(width) + "".join(f"{row[c]:13.3f}" for c in cols))
+        log.info(a.ljust(width) + "".join(f"{row[c]:13.3f}" for c in cols))
 
 
 # ---------------------------------------------------------------------------
@@ -380,13 +398,13 @@ def run_autoscale(
 
 
 def print_autoscale_table(table: Dict[str, Dict[str, float]], header: str) -> None:
-    print(f"\n== autoscale: {header} ==")
+    log.info(f"\n== autoscale: {header} ==")
     cols = list(next(iter(table.values())).keys())
     width = max(30, max(len(a) for a in table) + 2)
-    print("controller".ljust(width)
-          + "".join(_AUTOSCALE_COLS[c][:11].rjust(12) for c in cols))
+    log.info("controller".ljust(width)
+             + "".join(_AUTOSCALE_COLS[c][:11].rjust(12) for c in cols))
     for a, row in table.items():
-        print(a.ljust(width) + "".join(f"{row[c]:12.3f}" for c in cols))
+        log.info(a.ljust(width) + "".join(f"{row[c]:12.3f}" for c in cols))
 
 
 # ---------------------------------------------------------------------------
@@ -458,7 +476,7 @@ def run_fleet_scale(
 
 
 def print_fleet_scale(n_gpus: int, rows: Dict[str, Dict[str, float]]) -> None:
-    print(f"\n== fleet-scale @ {n_gpus} GPUs (deploy; fabric vs scalar) ==")
+    log.info(f"\n== fleet-scale @ {n_gpus} GPUs (deploy; fabric vs scalar) ==")
     cols = (
         "scalar_seconds", "seconds", "speedup", "n_gpus", "compute_wastage",
         "memory_wastage", "fragmentation", "n_pending",
@@ -470,14 +488,20 @@ def print_fleet_scale(n_gpus: int, rows: Dict[str, Dict[str, float]]) -> None:
         "fragmentation": "frag", "trace_avg_gpus": "tr_gpus",
         "trace_avg_cwaste": "tr_cwaste", "trace_engine_seconds": "tr_eng_s",
     }
-    print("policy".ljust(12) + "".join(short.get(c, c)[:10].rjust(11) for c in cols))
+    log.info("policy".ljust(12) + "".join(short.get(c, c)[:10].rjust(11) for c in cols))
     for a, row in rows.items():
-        print(a.ljust(12) + "".join(f"{row.get(c, float('nan')):11.3f}" for c in cols))
+        log.info(a.ljust(12) + "".join(f"{row.get(c, float('nan')):11.3f}" for c in cols))
 
 
 def write_json(path: str, report: Dict) -> None:
     """Write (merging into an existing report, so e.g. a ``--trace`` run and
-    an ``--autoscale`` run can share one ``BENCH_placement.json``)."""
+    an ``--autoscale`` run can share one ``BENCH_placement.json``).
+
+    Output is strict JSON: non-finite floats (the fleet-scale table's
+    ``nan`` speedup placeholders, for instance) are sanitized to ``null``
+    before serialization and ``allow_nan=False`` enforces it — parsers that
+    reject the bare ``NaN`` token can always read ``BENCH_*.json``.
+    """
     if not path:
         return
     merged: Dict = {}
@@ -495,8 +519,42 @@ def write_json(path: str, report: Dict) -> None:
     merged["schema"] = "placement_bench/v1"
     merged["generated_unix"] = time.time()
     with open(path, "w") as f:
-        json.dump(merged, f, indent=2, sort_keys=True)
-    print(f"\nwrote {path}")
+        json.dump(obs.sanitize_json(merged), f, indent=2, sort_keys=True,
+                  allow_nan=False)
+    log.info(f"wrote {path}")
+
+
+# ---------------------------------------------------------------------------
+# telemetry plumbing (--telemetry)
+# ---------------------------------------------------------------------------
+def planner_latency_section(tel: obs.Telemetry) -> Dict[str, Dict[str, float]]:
+    """Per-verb planner-latency percentiles from the live registry:
+    {"verb@policy": {count, p50_s, p95_s, p99_s, total_s}}."""
+    out: Dict[str, Dict[str, float]] = {}
+    for inst in tel.metrics.families().get("planner_latency_seconds", []):
+        labels = dict(inst.labels)
+        key = f"{labels.get('verb', '?')}@{labels.get('policy', '?')}"
+        pct = inst.percentiles((50, 95, 99))
+        out[key] = {
+            "count": float(inst.count),
+            "total_s": inst.sum,
+            "p50_s": pct["p50"],
+            "p95_s": pct["p95"],
+            "p99_s": pct["p99"],
+        }
+    return out
+
+
+def dump_telemetry(tel: obs.Telemetry, prefix: str) -> None:
+    """Write the run's spans/events as JSONL and the registry as Prometheus
+    text exposition, under ``{prefix}_spans.jsonl`` / ``{prefix}_metrics.prom``."""
+    spans_path = f"{prefix}_spans.jsonl"
+    prom_path = f"{prefix}_metrics.prom"
+    n = obs.write_jsonl(tel.tracer.records(), spans_path)
+    with open(prom_path, "w") as f:
+        f.write(obs.prometheus_text(tel.metrics))
+    log.info(f"wrote {spans_path} ({n} records) and {prom_path}")
+    log.info(f"render with: python -m repro.obs.report {spans_path}")
 
 
 def main() -> None:
@@ -549,9 +607,34 @@ def main() -> None:
                     help="trace horizon per fleet-scale size")
     ap.add_argument("--json", default="BENCH_placement.json",
                     help="machine-readable output path ('' disables)")
+    # observability
+    ap.add_argument("--telemetry", action="store_true",
+                    help="enable repro.obs: span-trace engine verbs, add "
+                    "planner-latency p50/p95/p99 to the JSON report, and "
+                    "dump spans (JSONL) + metrics (Prometheus text)")
+    ap.add_argument("--telemetry-prefix", default="TELEMETRY",
+                    help="output prefix for the spans/metrics dumps")
+    ap.add_argument("--verbose", "-v", action="store_true",
+                    help="debug logging (timings, progress) on stderr")
     args = ap.parse_args()
 
+    logging.basicConfig(
+        stream=sys.stderr,
+        level=logging.DEBUG if args.verbose else logging.INFO,
+        format="%(message)s",
+    )
+
+    tel: Optional[obs.Telemetry] = None
+    if args.telemetry:
+        tel = obs.enable()
+
     report: Dict = {"args": {k: v for k, v in vars(args).items() if k != "json"}}
+
+    def _finish(rep: Dict) -> None:
+        if tel is not None:
+            rep["planner_latency"] = planner_latency_section(tel)
+            dump_telemetry(tel, args.telemetry_prefix)
+        write_json(args.json, rep)
 
     if args.fleet_scale:
         report["fleet_scale"] = {}
@@ -559,9 +642,9 @@ def main() -> None:
             t0 = time.time()
             rows = run_fleet_scale(n, args.seed, args.fleet_horizon)
             print_fleet_scale(n, rows)
-            print(f"   ({time.time() - t0:.0f}s)")
+            log.debug(f"   ({time.time() - t0:.0f}s)")
             report["fleet_scale"][str(n)] = rows
-        write_json(args.json, report)
+        _finish(report)
         return
 
     if args.autoscale:
@@ -578,9 +661,9 @@ def main() -> None:
             f"{n_a100}x A100, horizon {args.horizon}, "
             f"policy {args.policies[0]}",
         )
-        print(f"   ({time.time() - t0:.0f}s)")
+        log.debug(f"   ({time.time() - t0:.0f}s)")
         report["autoscale"] = table
-        write_json(args.json, report)
+        _finish(report)
         return
 
     if args.trace:
@@ -598,9 +681,9 @@ def main() -> None:
             table,
             f"{n_a100}x A100 + {args.tpu_pods}x TPU pod, horizon {args.horizon}",
         )
-        print(f"   ({time.time() - t0:.0f}s)")
+        log.debug(f"   ({time.time() - t0:.0f}s)")
         report["trace"] = table
-        write_json(args.json, report)
+        _finish(report)
         return
 
     cases = (
@@ -613,9 +696,9 @@ def main() -> None:
             t0 = time.time()
             table = run_case(case, g, args.cases, args.time_limit, args.mip_cases)
             print_table(case, g, table)
-            print(f"   ({time.time() - t0:.0f}s)")
+            log.debug(f"   ({time.time() - t0:.0f}s)")
             report["snapshot"][f"{case}@{g}"] = table
-    write_json(args.json, report)
+    _finish(report)
 
 
 if __name__ == "__main__":

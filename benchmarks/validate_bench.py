@@ -1,0 +1,93 @@
+"""Strict-parse + schema-check ``BENCH_*.json`` reports (CI gate).
+
+The bench promises *strict* JSON — no bare ``NaN``/``Infinity`` tokens —
+and a stable top-level shape (``schema: placement_bench/v1`` plus at least
+one result section).  CI runs this validator over every report the smoke
+steps produced, so a regression in ``write_json`` (or a new section that
+forgets to sanitize) fails the build instead of silently shipping a file
+half the world's JSON parsers reject.
+
+    python -m benchmarks.validate_bench BENCH_placement.json [...]
+
+Exits non-zero listing every violation.  When a report carries a
+``planner_latency`` section (``--telemetry`` runs), each entry must have
+count/total_s/p50_s/p95_s/p99_s with p50 <= p95 <= p99.
+"""
+import argparse
+import json
+import sys
+from typing import List
+
+SCHEMA = "placement_bench/v1"
+#: at least one of these result sections must be present
+SECTIONS = ("snapshot", "trace", "autoscale", "fleet_scale")
+PCTL_KEYS = ("count", "total_s", "p50_s", "p95_s", "p99_s")
+
+
+def _reject_constant(token: str):
+    raise ValueError(f"non-strict JSON constant {token!r}")
+
+
+def validate(path: str) -> List[str]:
+    """All violations found in one report file (empty list = valid)."""
+    errors: List[str] = []
+    try:
+        with open(path) as f:
+            # parse_constant fires on NaN/Infinity/-Infinity — the exact
+            # tokens json.dump(allow_nan=True) would have emitted.
+            rep = json.load(f, parse_constant=_reject_constant)
+    except (OSError, ValueError) as e:
+        return [f"{path}: unreadable or non-strict JSON: {e}"]
+
+    if not isinstance(rep, dict):
+        return [f"{path}: top level is {type(rep).__name__}, expected object"]
+    if rep.get("schema") != SCHEMA:
+        errors.append(f"{path}: schema={rep.get('schema')!r}, expected {SCHEMA!r}")
+    if not isinstance(rep.get("generated_unix"), (int, float)):
+        errors.append(f"{path}: missing numeric generated_unix")
+    if not isinstance(rep.get("args"), dict):
+        errors.append(f"{path}: missing args object")
+    if not any(k in rep for k in SECTIONS):
+        errors.append(f"{path}: no result section (one of {SECTIONS})")
+
+    lat = rep.get("planner_latency")
+    if lat is not None:
+        if not isinstance(lat, dict):
+            errors.append(f"{path}: planner_latency is not an object")
+        else:
+            for verb, row in lat.items():
+                missing = [k for k in PCTL_KEYS if k not in row]
+                if missing:
+                    errors.append(
+                        f"{path}: planner_latency[{verb!r}] missing {missing}"
+                    )
+                    continue
+                if not row["p50_s"] <= row["p95_s"] <= row["p99_s"]:
+                    errors.append(
+                        f"{path}: planner_latency[{verb!r}] percentiles "
+                        f"not monotone: {row}"
+                    )
+                if row["count"] <= 0:
+                    errors.append(
+                        f"{path}: planner_latency[{verb!r}] empty ({row})"
+                    )
+    return errors
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("reports", nargs="+", help="BENCH_*.json paths")
+    args = ap.parse_args(argv)
+    failures: List[str] = []
+    for path in args.reports:
+        errs = validate(path)
+        failures.extend(errs)
+        print(f"{path}: {'OK' if not errs else f'{len(errs)} violation(s)'}",
+              file=sys.stderr)
+    for e in failures:
+        print(f"  {e}", file=sys.stderr)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -4,11 +4,20 @@ fragmented 3-GPU node is compacted (one GPU vacated), then reconfigured
 (bytes to transfer, downtime, migration-window makespans) and a commit
 decision, instead of mutating blindly.
 
-    PYTHONPATH=src python examples/compaction_demo.py
+    PYTHONPATH=src python examples/compaction_demo.py [--verbose]
+
+Output goes through the std `logging` module (stderr); `--verbose` adds
+debug-level detail (per-GPU occupancy maps).
 """
+import argparse
+import logging
+import sys
+
 from repro.core import metrics
 from repro.core.engine import CommitPolicy, PlacementEngine
 from repro.core.state import ClusterState, Workload
+
+log = logging.getLogger("repro.examples.compaction")
 
 
 def draw(state: ClusterState) -> None:
@@ -17,12 +26,12 @@ def draw(state: ClusterState) -> None:
         occ = gpu.memory_occupancy()
         cells = "".join(f"[{(w or '--'):>4}]" for w in occ)
         waste = gpu.compute_waste() + gpu.memory_waste()
-        print(f"  {gid}: {cells}  waste={waste}")
+        log.debug(f"  {gid}: {cells}  waste={waste}")
 
 
 def report(tag: str, state: ClusterState, initial=None) -> None:
     m = metrics.evaluate(state, initial)
-    print(f"{tag}: GPUs={m.n_gpus} computeWaste={m.compute_wastage} "
+    log.info(f"{tag}: GPUs={m.n_gpus} computeWaste={m.compute_wastage} "
           f"memWaste={m.memory_wastage} cUtil={m.compute_utilization:.0%} "
           f"mUtil={m.memory_utilization:.0%}")
     draw(state)
@@ -30,15 +39,15 @@ def report(tag: str, state: ClusterState, initial=None) -> None:
 
 def describe_plan(tag: str, res) -> None:
     plan, cost = res.plan, res.cost
-    print(f"\n{tag} plan: {plan.n_moves} moves ({plan.n_sequential} sequential, "
+    log.info(f"\n{tag} plan: {plan.n_moves} moves ({plan.n_sequential} sequential, "
           f"{len(plan.disruptive)} disruptive), waves={[len(w) for w in plan.waves]}")
-    print(f"  cost: {cost.total_bytes / 2**30:.0f} GiB to move, "
+    log.info(f"  cost: {cost.total_bytes / 2**30:.0f} GiB to move, "
           f"downtime {cost.downtime_seconds:.1f}s, "
           f"window {cost.duration_seconds:.1f}s "
           f"(makespans {[round(s, 2) for s in cost.wave_makespans]})")
-    print(f"  gains: {res.gains.gpus_saved} GPU(s) saved, "
+    log.info(f"  gains: {res.gains.gpus_saved} GPU(s) saved, "
           f"{res.gains.waste_saved} wastage slice(s) removed")
-    print(f"  decision [{res.decision.reason}] -> "
+    log.info(f"  decision [{res.decision.reason}] -> "
           f"{'COMMIT' if res.committed else 'REJECT'}")
 
 
@@ -63,6 +72,15 @@ def build_fig4_state() -> ClusterState:
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--verbose", "-v", action="store_true")
+    args = ap.parse_args()
+    logging.basicConfig(
+        stream=sys.stderr,
+        level=logging.DEBUG if args.verbose else logging.INFO,
+        format="%(message)s",
+    )
+
     initial = build_fig4_state()
     report("initial   ", initial)
     engine = PlacementEngine("rule_based")
@@ -97,7 +115,7 @@ def main() -> None:
     assert mr.compute_wastage <= mc.compute_wastage
     assert not res_g.committed, "undervalued gains must be rejected"
     assert metrics.evaluate(guarded).n_gpus == metrics.evaluate(initial).n_gpus
-    print("\nOK: compaction saved a GPU; reconfiguration also removed wastage; "
+    log.info("\nOK: compaction saved a GPU; reconfiguration also removed wastage; "
           "the net-positive policy rejected the undervalued repack")
 
 

@@ -4,18 +4,37 @@ Builds an 8-GPU A100 cluster in the Sec-5.1 simulator, then places the same
 random workload set with all four approaches (first-fit, load-balanced,
 rule-based heuristic, WPM MIP) and prints the Table-3 metrics side by side.
 
-    PYTHONPATH=src python examples/quickstart.py
+    PYTHONPATH=src python examples/quickstart.py [--verbose]
+
+Output goes through the std `logging` module (stderr); `--verbose` adds
+debug-level detail.
 """
+import argparse
+import logging
+import sys
+
 from repro.core import baselines, heuristic, metrics
 from repro.core.simulator import generate_test_case
 from repro.core.wpm_mip import solve_wpm
 
 
+log = logging.getLogger("repro.examples.quickstart")
+
+
 def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--verbose", "-v", action="store_true")
+    args = ap.parse_args()
+    logging.basicConfig(
+        stream=sys.stderr,
+        level=logging.DEBUG if args.verbose else logging.INFO,
+        format="%(message)s",
+    )
+
     tc = generate_test_case(seed=7, n_gpus=8)
     n_new = len(tc.new_workloads)
     n_old = len(tc.initial.workloads)
-    print(f"cluster: 8 x A100-80GB | existing workloads: {n_old} | new: {n_new}\n")
+    log.info(f"cluster: 8 x A100-80GB | existing workloads: {n_old} | new: {n_new}\n")
 
     rows = []
     for name in ("first_fit", "load_balanced", "rule_based", "mip", "joint_mip"):
@@ -42,10 +61,10 @@ def main() -> None:
 
     hdr = (f"{'approach':14} {'#GPUs':>5} {'pend':>5} {'cWaste':>6} {'mWaste':>6} "
            f"{'avail':>6} {'cUtil':>6} {'mUtil':>6} {'seqMig':>6}")
-    print(hdr)
-    print("-" * len(hdr))
+    log.info(hdr)
+    log.info("-" * len(hdr))
     for name, m in rows:
-        print(f"{name:14} {m.n_gpus:5d} {m.n_pending:5d} {m.compute_wastage:6d} "
+        log.info(f"{name:14} {m.n_gpus:5d} {m.n_pending:5d} {m.compute_wastage:6d} "
               f"{m.memory_wastage:6d} {m.availability:6d} "
               f"{m.compute_utilization:6.2f} {m.memory_utilization:6.2f} "
               f"{m.sequential_migrations:6d}")

@@ -15,8 +15,14 @@ engines instead of hand-scripting deploy/scale-down:
      drain before teardown);
   4. compaction afterwards, then verify the survivors still serve.
 
-    PYTHONPATH=src python examples/serve_cluster.py
+    PYTHONPATH=src python examples/serve_cluster.py [--verbose]
+
+Output goes through the std `logging` module (stderr); `--verbose` adds
+per-tick autoscale detail.
 """
+import argparse
+import logging
+import sys
 import time
 
 import jax
@@ -33,6 +39,8 @@ MODELS = {
     "chat": "smollm-135m",
     "draft": "xlstm-125m",
 }
+log = logging.getLogger("repro.examples.serve")
+
 TICK = 5.0  # simulated seconds per control tick
 HORIZON = 30.0
 #: wall-clock latency budget a request must meet to count as attained
@@ -81,6 +89,15 @@ def pump_measuring(srv: ClusterServer, submitted_wall: dict, latencies: dict,
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--verbose", "-v", action="store_true")
+    args = ap.parse_args()
+    logging.basicConfig(
+        stream=sys.stderr,
+        level=logging.DEBUG if args.verbose else logging.INFO,
+        format="%(message)s",
+    )
+
     srv = ClusterServer(
         n_nodes=4,
         policy="heuristic",
@@ -102,13 +119,13 @@ def main() -> None:
     # 1. seed deployment: ONE replica per model; the controller grows it.
     for model, arch in MODELS.items():
         rep = srv.deploy(model, arch, n_replicas=1, profile_id=4)
-        print(f"deploy {model}: placed={rep.placed} nodes={rep.metrics.n_gpus}")
+        log.info(f"deploy {model}: placed={rep.placed} nodes={rep.metrics.n_gpus}")
         for wid in rep.placed:
             srv.attach_engine(wid, make_engine(arch, seed=hash(wid) % 2**31))
 
     # 2-3. replay the bursty trace tick by tick under autoscale control.
     trace = bursty_trace()
-    print(f"trace: {trace.n_requests} requests over {HORIZON:.0f}s "
+    log.info(f"trace: {trace.n_requests} requests over {HORIZON:.0f}s "
           f"(chat flash crowd at t=10..20)")
     submitted_wall, latencies = {}, {}
     served = 0
@@ -136,19 +153,19 @@ def main() -> None:
             ) if rids else 1.0
         rep = srv.autoscale(now=t + TICK, attainment=attain)
         targets = {d.model: f"{d.current}->{d.target}" for d in rep.decisions}
-        print(f"  t={t + TICK:4.0f}s offered={{"
+        log.debug(f"  t={t + TICK:4.0f}s offered={{"
               + ", ".join(f"{m}: {r:.2f}rps" for m, r in rep.offered_rps.items())
               + f"}} replicas={targets} slo_attain={attain} "
               f"nodes={srv.utilization()['nodes_used']}")
         t += TICK
 
     hit = sum(v <= SLO_WALL_SECONDS for v in latencies.values())
-    print(f"served {served} tokens, {len(latencies)} requests; "
+    log.info(f"served {served} tokens, {len(latencies)} requests; "
           f"overall SLO attainment {hit / max(len(latencies), 1):.2f}")
 
     # 4. compaction, then serve again to prove the survivors are live.
     cr = srv.compact()
-    print(f"compaction: {cr.before.n_gpus} -> {cr.after.n_gpus} nodes "
+    log.info(f"compaction: {cr.before.n_gpus} -> {cr.after.n_gpus} nodes "
           f"({cr.plan.n_moves} moves, committed={cr.committed})")
     srv.submit("chat", Request(rid="post-compact", prompt=[5, 4, 3],
                                max_new_tokens=4))
@@ -156,7 +173,7 @@ def main() -> None:
     assert any(c.rid == "post-compact"
                for e in srv.engines.values() for c in e.completed)
     srv.state.validate()
-    print("post-compaction serving OK")
+    log.info("post-compaction serving OK")
 
 
 if __name__ == "__main__":

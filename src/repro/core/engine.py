@@ -46,6 +46,7 @@ import dataclasses
 import time
 from typing import Callable, Dict, List, Optional, Sequence, Tuple, Type, Union
 
+from ..obs import get_telemetry
 from . import baselines, heuristic
 from .migration import (
     BytesFor,
@@ -550,34 +551,82 @@ class PlacementEngine:
         )
         return plan, cost, gains, self.commit_policy.decide(gains, cost)
 
+    # -- telemetry ---------------------------------------------------------
+    def _record_verb(self, tel, res: EngineResult) -> None:
+        """Feed one verb outcome into the metrics registry (live only)."""
+        m = tel.metrics
+        labels = {"verb": res.verb, "policy": res.policy}
+        m.histogram(
+            "planner_latency_seconds", "wall time of one engine verb",
+            labels=labels,
+        ).observe(res.seconds)
+        m.counter("engine_verbs_total", "engine verb invocations",
+                  labels=labels).inc()
+        if res.decision is not None:
+            which = "plans_committed_total" if res.committed else "plans_rejected_total"
+            m.counter(
+                which, "commit decisions by verb and deciding term",
+                labels={**labels, "term": res.decision.term or "unknown"},
+            ).inc()
+        if res.cost is not None:
+            m.counter("bytes_priced_total", "bytes priced across scored plans",
+                      labels=labels).inc(float(res.cost.total_bytes))
+        if res.pending:
+            m.counter("workloads_pending_total",
+                      "workloads a verb failed to place",
+                      labels=labels).inc(float(len(res.pending)))
+
     # -- verbs -------------------------------------------------------------
     def deploy(
         self, state: ClusterState, new_workloads: Sequence[Workload]
     ) -> EngineResult:
         self._check("deploy")
+        tel = get_telemetry()
         t0 = time.time()
-        routed = self._route(state, new_workloads)
-        if not routed:  # empty cluster: scalar-policy parity = all pending
-            for w in new_workloads:
-                state.add_workload(w)
-            return EngineResult(
-                self.policy.name, "deploy", list(new_workloads), time.time() - t0
+        with tel.tracer.span("deploy") as sp:
+            routed = self._route(state, new_workloads)
+            if not routed:  # empty cluster: scalar-policy parity = all pending
+                for w in new_workloads:
+                    state.add_workload(w)
+                res = EngineResult(
+                    self.policy.name, "deploy", list(new_workloads),
+                    time.time() - t0,
+                )
+                if tel.enabled:
+                    sp.set(policy=self.policy.name, n_workloads=0,
+                           n_pending=len(res.pending))
+                    self._record_verb(tel, res)
+                return res
+
+            def _deploy_group(sub, kind):
+                if not routed[kind]:
+                    return []  # don't wake solver policies for untouched groups
+                return self.policy.deploy(sub, routed[kind])
+
+            before = state.clone() if self.plan_deploys else None
+            with tel.tracer.span("plan"):
+                pending = self._per_group(state, _deploy_group)
+            res = EngineResult(
+                self.policy.name, "deploy", pending, time.time() - t0
             )
-
-        def _deploy_group(sub, kind):
-            if not routed[kind]:
-                return []  # don't wake solver policies for untouched groups
-            return self.policy.deploy(sub, routed[kind])
-
-        before = state.clone() if self.plan_deploys else None
-        pending = self._per_group(state, _deploy_group)
-        res = EngineResult(self.policy.name, "deploy", pending, time.time() - t0)
-        if before is not None:
-            # Deploys are admissions, not optimizations: score the plan (new
-            # placements are wave-0 moves; joint policies may also relocate
-            # existing replicas) but never gate the commit on it.
-            res.plan, res.cost, res.gains, res.decision = self._score(before, state)
-            res.baseline = before
+            if before is not None:
+                # Deploys are admissions, not optimizations: score the plan
+                # (new placements are wave-0 moves; joint policies may also
+                # relocate existing replicas) but never gate the commit on it.
+                with tel.tracer.span("score") as ssp:
+                    res.plan, res.cost, res.gains, res.decision = self._score(
+                        before, state
+                    )
+                    if tel.enabled:
+                        ssp.set(n_moves=res.plan.n_moves,
+                                total_bytes=res.cost.total_bytes)
+                res.baseline = before
+            res.seconds = time.time() - t0
+            if tel.enabled:
+                sp.set(policy=self.policy.name,
+                       n_workloads=len(new_workloads),
+                       n_pending=len(res.pending))
+                self._record_verb(tel, res)
         return res
 
     def compact(self, state: ClusterState) -> EngineResult:
@@ -597,27 +646,54 @@ class PlacementEngine:
         lists, occupancy caches, and GPUState identities all restored.
         """
         self._check(verb)
+        tel = get_telemetry()
         t0 = time.time()
-        before = state.clone()  # plan baseline (placement lists only)
-        pending: List[Workload] = []
-        with state.transaction() as txn:
-            pending = self._per_group(state, lambda sub, kind: fn(sub)) or []
-            plan, cost, gains, decision = self._score(before, state)
-            if not decision.commit:
-                txn.rollback()
-                pending = []  # layout kept: nothing was evicted
-        return EngineResult(
-            self.policy.name,
-            verb,
-            pending,
-            time.time() - t0,
-            plan=plan,
-            cost=cost,
-            gains=gains,
-            decision=decision,
-            committed=decision.commit,
-            baseline=before,
-        )
+        with tel.tracer.span(verb) as sp:
+            before = state.clone()  # plan baseline (placement lists only)
+            pending: List[Workload] = []
+            with state.transaction() as txn:
+                with tel.tracer.span("plan"):
+                    pending = self._per_group(state, lambda sub, kind: fn(sub)) or []
+                with tel.tracer.span("score") as ssp:
+                    plan, cost, gains, decision = self._score(before, state)
+                    if tel.enabled:
+                        ssp.set(n_moves=plan.n_moves,
+                                total_bytes=cost.total_bytes,
+                                gpus_saved=gains.gpus_saved,
+                                waste_saved=gains.waste_saved)
+                if not decision.commit:
+                    with tel.tracer.span("rollback") as rsp:
+                        txn.rollback()
+                        if tel.enabled:
+                            rsp.set(reason=decision.reason, term=decision.term)
+                    pending = []  # layout kept: nothing was evicted
+                else:
+                    # Commit = leaving the transaction without rollback; the
+                    # span marks the decision so every committed verb has a
+                    # complete plan/score/commit tree in the trace.
+                    with tel.tracer.span("commit") as csp:
+                        if tel.enabled:
+                            csp.set(reason=decision.reason, term=decision.term,
+                                    n_moves=plan.n_migrations)
+            res = EngineResult(
+                self.policy.name,
+                verb,
+                pending,
+                time.time() - t0,
+                plan=plan,
+                cost=cost,
+                gains=gains,
+                decision=decision,
+                committed=decision.commit,
+                baseline=before,
+            )
+            if tel.enabled:
+                sp.set(policy=self.policy.name, committed=decision.commit,
+                       reason=decision.reason, term=decision.term,
+                       n_moves=plan.n_moves,
+                       bytes_priced=cost.total_bytes)
+                self._record_verb(tel, res)
+        return res
 
     def _check(self, verb: str) -> None:
         if verb not in self.policy.supports:

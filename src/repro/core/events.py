@@ -37,6 +37,7 @@ from typing import Deque, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from ..obs import get_telemetry
 from .autoscaler import SLO, Autoscaler, ModelLoad
 from .engine import PlacementEngine
 from .fleetgen import FleetSpec, build_fleet  # noqa: F401  (re-exported API)
@@ -175,6 +176,12 @@ class TraceStats:
     n_reconfigures: int = 0
     n_reconfigures_deferred: int = 0
     n_plans_rejected: int = 0  # all rejected plans (compact + reconfigure)
+    #: rejected plans by the CommitPolicy's deciding term (e.g.
+    #: ``net-benefit``, ``moves``, ``downtime``) — the structured "why"
+    #: behind ``n_plans_rejected``.
+    plan_rejections: Dict[str, int] = dataclasses.field(default_factory=dict)
+    #: most recent rejection's human-readable reason ("" if none).
+    last_rejection_reason: str = ""
     bytes_moved: float = 0.0
     disruption_seconds: float = 0.0  # summed per-replica unavailability
     migration_window_seconds: float = 0.0  # wall-clock spent migrating
@@ -249,6 +256,10 @@ class OnlineSimulator:
             self._commit_override = cp
         #: end of the currently-open migration window (simulated clock).
         self._busy_until = 0.0
+        #: cached (registry, gauges) for the per-event fleet-health gauges
+        #: — registry lookups are label-canonicalizing dict probes, too
+        #: slow for the hot event loop.
+        self._gauge_cache: Optional[tuple] = None
 
     # -- metric integration over time --------------------------------------
     def _sample(self) -> Tuple[int, int, int, float]:
@@ -302,8 +313,16 @@ class OnlineSimulator:
         )
         acc = np.zeros(4)  # integrals of the _sample() tuple
         t_prev = 0.0
+        tel = get_telemetry()
+        last_t = 0.0  # when the fleet last changed (gauge timestamps)
         for ev in self._events_with_compactions(trace):
             sample = self._sample()
+            if tel.enabled:
+                # The pre-event sample describes the fleet since the LAST
+                # event — record it there, reusing the scan the
+                # time-averaged stats already paid for.
+                self._record_sample_gauges(tel, last_t, sample)
+            last_t = ev.time
             # Integration is clamped to [0, horizon]: an event past the
             # horizon still mutates state (the replica really departs) but
             # contributes no weight, so the final partial interval is counted
@@ -322,6 +341,8 @@ class OnlineSimulator:
             else:  # pragma: no cover
                 raise ValueError(f"unknown event kind {ev.kind!r}")
         sample = self._sample()
+        if tel.enabled:
+            self._record_sample_gauges(tel, trace.horizon, sample)
         acc += np.array(sample) * max(trace.horizon - t_prev, 0.0)
         stats.peak_gpus_used = max(stats.peak_gpus_used, sample[0])
         h = max(trace.horizon, 1e-9)
@@ -356,12 +377,15 @@ class OnlineSimulator:
     def _handle_plan_verb(self, verb: str, stats: TraceStats, now: float) -> None:
         if verb not in self.engine.policy.supports:
             return
+        tel = get_telemetry()
         if now < self._busy_until:
             # A previous plan's waves/drains still occupy the fleet.
             if verb == "compact":
                 stats.n_compactions_deferred += 1
             else:
                 stats.n_reconfigures_deferred += 1
+            tel.tracer.event("verb_deferred", time=now, verb=verb,
+                             busy_until=self._busy_until)
             return
         saved = self.engine.commit_policy
         if self._commit_override is not None:
@@ -377,6 +401,12 @@ class OnlineSimulator:
             if verb == "compact":
                 stats.n_compactions_skipped += 1
             stats.n_plans_rejected += 1
+            term = res.decision.term or "unknown"
+            stats.plan_rejections[term] = stats.plan_rejections.get(term, 0) + 1
+            stats.last_rejection_reason = res.decision.reason
+            tel.tracer.event("plan_rejected", time=now, verb=verb, term=term,
+                             reason=res.decision.reason,
+                             shortfall=res.decision.shortfall)
             return
         if verb == "compact":
             stats.n_compactions += 1
@@ -394,6 +424,51 @@ class OnlineSimulator:
             stats.disruption_seconds += res.cost.downtime_seconds
             stats.migration_window_seconds += res.cost.duration_seconds
             self._busy_until = now + res.cost.duration_seconds
+            if tel.enabled:
+                tel.tracer.event(
+                    "migration_window", time=now,
+                    duration=res.cost.duration_seconds, verb=verb,
+                    n_moves=res.plan.n_migrations if res.plan else 0,
+                    total_bytes=res.cost.total_bytes,
+                    downtime_seconds=res.cost.downtime_seconds,
+                )
+                tel.metrics.counter(
+                    "bytes_moved_total", "bytes moved by committed plans",
+                ).inc(float(res.cost.total_bytes), t=now)
+        if tel.enabled:
+            self._record_fleet_gauges(tel, now)
+
+    def _record_sample_gauges(self, tel, t: float, sample) -> None:
+        """Fleet-health time series on the simulated clock, fed from the
+        run loop's own per-event :meth:`_sample` — telemetry piggybacks on
+        the scan the time-averaged stats already pay for (zero extra
+        fleet scans when enabled)."""
+        m = tel.metrics
+        if self._gauge_cache is None or self._gauge_cache[0] is not m:
+            self._gauge_cache = (m, (
+                m.gauge("gpus_used", "GPUs hosting at least one workload"),
+                m.gauge("compute_waste_slices",
+                        "blocked-but-unusable compute slices"),
+                m.gauge("memory_waste_slices", "wasted memory slices"),
+                m.gauge("mem_occupancy", "used / total fleet memory slices"),
+            ))
+        g_used, g_cw, g_mw, g_occ = self._gauge_cache[1]
+        used, cmp_waste, mem_waste, occupancy = sample
+        g_used.set(used, t=t)
+        g_cw.set(cmp_waste, t=t)
+        g_mw.set(mem_waste, t=t)
+        g_occ.set(occupancy, t=t)
+
+    def _record_fleet_gauges(self, tel, now: float) -> None:
+        """Gauges that need their own fleet scan (fragmentation) — recorded
+        only after the rare plan verbs, not on every arrival/departure."""
+        used = self.state.used_gpus()
+        tel.metrics.gauge(
+            "fragmentation", "mean free-slice fragmentation (Ting et al.)"
+        ).set(
+            sum(g.fragmentation() for g in used) / len(used) if used else 0.0,
+            t=now,
+        )
 
 
 # ---------------------------------------------------------------------------
@@ -723,21 +798,61 @@ class DemandSimulator(OnlineSimulator):
         stats.n_autoscale_ticks += 1
         interval = now - self._last_tick
         self._last_tick = now
-        obs_list = self._observations(interval)
-        if self.autoscaler is not None:
-            for dec, obs in zip(self.autoscaler.tick(now, obs_list), obs_list):
-                spec = self.specs[dec.model]
-                if dec.delta > 0:
-                    pid = self._choose_profile(spec, obs.offered_rps, dec.target)
-                    placed = self._deploy_replicas(
-                        dec.model, dec.delta, pid, stats
-                    )
-                    stats.n_scale_ups += len(placed)
-                    self._dispatch(dec.model, now, heap, seq)
-                elif dec.delta < 0:
-                    self._retire_replicas(dec.model, -dec.delta, stats)
-                else:
-                    self._maybe_resize(dec.model, obs, now, stats, heap, seq)
+        tel = get_telemetry()
+        with tel.tracer.span("autoscale_tick") as sp:
+            obs_list = self._observations(interval)
+            if tel.enabled:
+                for obs in obs_list:
+                    lbl = {"model": obs.model}
+                    tel.metrics.gauge(
+                        "queue_depth", "requests waiting per model",
+                        labels=lbl,
+                    ).set(obs.queue_depth, t=now)
+                    tel.metrics.gauge(
+                        "slo_attainment", "window SLO attainment per model",
+                        labels=lbl,
+                    ).set(obs.slo_attainment, t=now)
+                    tel.metrics.gauge(
+                        "offered_rps", "offered load per model", labels=lbl,
+                    ).set(obs.offered_rps, t=now)
+                    tel.metrics.gauge(
+                        "replicas", "live replicas per model", labels=lbl,
+                    ).set(obs.replicas, t=now)
+            n_ups = n_downs = 0
+            if self.autoscaler is not None:
+                for dec, obs in zip(self.autoscaler.tick(now, obs_list), obs_list):
+                    spec = self.specs[dec.model]
+                    if dec.delta > 0:
+                        pid = self._choose_profile(spec, obs.offered_rps, dec.target)
+                        placed = self._deploy_replicas(
+                            dec.model, dec.delta, pid, stats
+                        )
+                        stats.n_scale_ups += len(placed)
+                        n_ups += len(placed)
+                        tel.tracer.event(
+                            "autoscale_up", time=now, model=dec.model,
+                            delta=dec.delta, placed=len(placed),
+                            target=dec.target, profile_id=pid,
+                        )
+                        self._dispatch(dec.model, now, heap, seq)
+                    elif dec.delta < 0:
+                        self._retire_replicas(dec.model, -dec.delta, stats)
+                        n_downs += -dec.delta
+                        tel.tracer.event(
+                            "autoscale_down", time=now, model=dec.model,
+                            delta=dec.delta, target=dec.target,
+                        )
+                    else:
+                        before_resizes = stats.n_resizes
+                        self._maybe_resize(dec.model, obs, now, stats, heap, seq)
+                        if stats.n_resizes > before_resizes:
+                            tel.tracer.event(
+                                "autoscale_resize", time=now, model=dec.model,
+                            )
+            if tel.enabled:
+                sp.set(sim_time=now, n_scale_ups=n_ups, n_scale_downs=n_downs)
+                self._record_sample_gauges(tel, now, self._fleet_sample())
+                self._record_fleet_gauges(tel, now)
         for model in self._win:
             self._win[model] = self._fresh_window()
 

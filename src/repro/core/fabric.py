@@ -45,10 +45,12 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from ..obs import get_telemetry
 from .profiles import DeviceModel, Profile
 from .state import ClusterState, Placement, Workload
 
@@ -378,6 +380,9 @@ class FleetFabric:
         """
         if self.gids != state.ordered_gids():
             return False
+        tel = get_telemetry()
+        t0 = time.perf_counter() if tel.enabled else 0.0
+        refreshed = 0
         for r, gid in enumerate(self.gids):
             gpu = state.gpus[gid]
             if gpu.device.name != self.kinds[self.kind_id[r]]:
@@ -386,6 +391,17 @@ class FleetFabric:
             if snap != self._snaps[r]:
                 self._rebuild_row(r, gpu)
                 self._snaps[r] = snap
+                refreshed += 1
+        if tel.enabled:
+            tel.metrics.histogram(
+                "fabric_refresh_seconds",
+                "per-sync cost of refreshing mutated fabric rows",
+            ).observe(time.perf_counter() - t0)
+            if refreshed:
+                tel.metrics.counter(
+                    "fabric_rows_refreshed_total",
+                    "fabric rows rebuilt from their GPUState",
+                ).inc(refreshed)
         return True
 
     def _refresh_row(self, r: int) -> None:
@@ -426,6 +442,8 @@ class FleetFabric:
 
     def _sweep_feasible(self) -> np.ndarray:
         """One batched kernel sweep: (G, P_max, I) feasibility, all triples."""
+        tel = get_telemetry()
+        t0 = time.perf_counter() if tel.enabled else 0.0
         G = len(self.gids)
         out = np.zeros((G, self.P_max, self.M), bool)
         for kind in self.kinds:
@@ -441,10 +459,18 @@ class FleetFabric:
                 else _feasible_all_np(*args)
             )
             out[:, : got.shape[1], :] |= got
+        if tel.enabled:
+            tel.metrics.histogram(
+                "fabric_score_seconds",
+                "batched kernel sweep time over all (gpu, profile, index) triples",
+                labels={"kernel": "feasible"},
+            ).observe(time.perf_counter() - t0)
         return out
 
     def _sweep_scores(self) -> Tuple[np.ndarray, np.ndarray]:
         """One batched kernel sweep: (G, P_max, I) waste_delta + frag runs."""
+        tel = get_telemetry()
+        t0 = time.perf_counter() if tel.enabled else 0.0
         G = len(self.gids)
         waste = np.zeros((G, self.P_max, self.M), np.int32)
         frag = np.zeros((G, self.P_max, self.M), np.int32)
@@ -463,6 +489,12 @@ class FleetFabric:
             P = w.shape[1]
             waste[rows, :P] = w[rows]
             frag[rows, :P] = f[rows]
+        if tel.enabled:
+            tel.metrics.histogram(
+                "fabric_score_seconds",
+                "batched kernel sweep time over all (gpu, profile, index) triples",
+                labels={"kernel": "score"},
+            ).observe(time.perf_counter() - t0)
         return waste, frag
 
     def feasible_all(self) -> np.ndarray:

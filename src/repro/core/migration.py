@@ -328,10 +328,30 @@ class PlanGains:
 
 @dataclasses.dataclass(frozen=True)
 class CommitDecision:
+    """The structured verdict of a :class:`CommitPolicy`.
+
+    ``term`` names which gain/budget term decided the outcome and
+    ``shortfall`` says by how much it failed (0 for commits), so callers —
+    ``EngineResult``, ``TraceStats.plan_rejections``, telemetry — can
+    aggregate *why* plans are rejected instead of a bare count:
+
+    * ``"no-op"`` / ``"always"``  — trivially committed
+    * ``"moves"``                 — move count over ``move_budget``
+    * ``"bytes"``                 — bytes over ``bytes_budget``
+    * ``"downtime"``              — downtime over ``downtime_budget_seconds``
+    * ``"budgets"``               — budgeted mode, all budgets respected
+    * ``"net-benefit"``           — net-positive mode's benefit-vs-price term
+    """
+
     commit: bool
     reason: str
     benefit: float = 0.0
     price: float = 0.0
+    #: which term decided (see class docstring).
+    term: str = ""
+    #: how far the failing term missed (benefit units for ``net-benefit``,
+    #: the budgeted quantity's units otherwise); 0.0 when committed.
+    shortfall: float = 0.0
 
 
 COMMIT_MODES = ("always", "net-positive", "budgeted")
@@ -376,20 +396,23 @@ class CommitPolicy:
 
     def decide(self, gains: PlanGains, cost: PlanCost) -> CommitDecision:
         if cost.n_moves == 0:
-            return CommitDecision(True, "no-op plan")
+            return CommitDecision(True, "no-op plan", term="no-op")
         # The move budget is a hard cap in EVERY mode (it is the legacy
         # ``migration_budget`` contract); the downtime/bytes budgets only
         # bind in ``budgeted`` mode.
         if self.move_budget is not None and cost.n_moves > self.move_budget:
             return CommitDecision(
-                False, f"moves {cost.n_moves} > budget {self.move_budget}"
+                False, f"moves {cost.n_moves} > budget {self.move_budget}",
+                term="moves", shortfall=float(cost.n_moves - self.move_budget),
             )
         if self.mode == "always":
-            return CommitDecision(True, "always-commit")
+            return CommitDecision(True, "always-commit", term="always")
         if self.mode == "budgeted":
             if self.bytes_budget is not None and cost.total_bytes > self.bytes_budget:
                 return CommitDecision(
-                    False, f"bytes {cost.total_bytes} > budget {self.bytes_budget}"
+                    False, f"bytes {cost.total_bytes} > budget {self.bytes_budget}",
+                    term="bytes",
+                    shortfall=float(cost.total_bytes - self.bytes_budget),
                 )
             if (
                 self.downtime_budget_seconds is not None
@@ -399,8 +422,10 @@ class CommitPolicy:
                     False,
                     f"downtime {cost.downtime_seconds:.1f}s > "
                     f"budget {self.downtime_budget_seconds:.1f}s",
+                    term="downtime",
+                    shortfall=cost.downtime_seconds - self.downtime_budget_seconds,
                 )
-            return CommitDecision(True, "within budgets")
+            return CommitDecision(True, "within budgets", term="budgets")
         # net-positive
         benefit = (
             gains.gpus_saved * self.gpu_seconds_value
@@ -414,9 +439,10 @@ class CommitPolicy:
         if benefit > price:
             return CommitDecision(
                 True, f"benefit {benefit:.1f} > disruption {price:.1f}",
-                benefit=benefit, price=price,
+                benefit=benefit, price=price, term="net-benefit",
             )
         return CommitDecision(
             False, f"benefit {benefit:.1f} <= disruption {price:.1f}",
-            benefit=benefit, price=price,
+            benefit=benefit, price=price, term="net-benefit",
+            shortfall=price - benefit,
         )

@@ -51,6 +51,7 @@ from ..core.state import ClusterState, Workload
 from ..core.tpu_profiles import TPU_V5E_POD, profile_for_chips
 from ..core.traffic import RequestShape
 from ..models import bundle
+from ..obs import get_telemetry
 from .kvcache import live_kv_bytes
 
 __all__ = [
@@ -386,40 +387,62 @@ class ClusterServer:
         wid through the move — the live decode cache rides along (KV
         handoff).  Drained replicas resume last, cold.
         """
+        tel = get_telemetry()
         steps: List[MigrationStep] = []
         drained: List[str] = []
         handoffs: List[str] = []
-        for mv in plan.disruptive:
-            eng = self.engines.get(mv.wid)
-            if eng is not None:
-                while getattr(eng, "has_work", False):
-                    eng.step()  # finish in-flight requests before teardown
-            steps.append(MigrationStep("drain", mv.wid))
-            drained.append(mv.wid)
-        for i, wave in enumerate(plan.waves):
-            for mv in wave:
-                if mv.src_gid is None:
-                    continue  # fresh deployment: nothing to copy
-                handoff = mv.wid in self.engines
-                steps.append(MigrationStep("copy", mv.wid, wave=i, kv_handoff=handoff))
-                steps.append(MigrationStep("cutover", mv.wid, wave=i))
-                if handoff:
-                    handoffs.append(mv.wid)
-        for mv in plan.disruptive:
-            # drained replicas still transfer their weights (KV went cold
-            # with the drain, so no handoff) before the cold resume.
-            steps.append(MigrationStep("copy", mv.wid))
-            steps.append(MigrationStep("resume", mv.wid))
-        # The engine already priced this exact plan (same state, same
-        # bytes_for) when it scored the commit; fresh deployments priced at
-        # zero there, so the totals are the executed moves' totals.
-        cost = plan.cost
-        if cost is None:  # plans from older call sites: price once here
-            cost = self.engine.cost_model.price(
-                plan, self.state, bytes_for=self.engine.bytes_for
-            )
-        bytes_moved = cost.total_bytes
-        downtime = cost.downtime_seconds
+        with tel.tracer.span("execute_plan") as sp:
+            with tel.tracer.span("drain") as dsp:
+                for mv in plan.disruptive:
+                    eng = self.engines.get(mv.wid)
+                    if eng is not None:
+                        while getattr(eng, "has_work", False):
+                            eng.step()  # finish in-flight requests before teardown
+                    steps.append(MigrationStep("drain", mv.wid))
+                    drained.append(mv.wid)
+                if tel.enabled:
+                    dsp.set(n_drained=len(drained))
+            for i, wave in enumerate(plan.waves):
+                with tel.tracer.span("copy_wave") as wsp:
+                    n_copied = 0
+                    for mv in wave:
+                        if mv.src_gid is None:
+                            continue  # fresh deployment: nothing to copy
+                        handoff = mv.wid in self.engines
+                        steps.append(
+                            MigrationStep("copy", mv.wid, wave=i, kv_handoff=handoff)
+                        )
+                        steps.append(MigrationStep("cutover", mv.wid, wave=i))
+                        n_copied += 1
+                        if handoff:
+                            handoffs.append(mv.wid)
+                    if tel.enabled:
+                        wsp.set(wave=i, n_moves=n_copied)
+            with tel.tracer.span("resume") as rsp:
+                for mv in plan.disruptive:
+                    # drained replicas still transfer their weights (KV went
+                    # cold with the drain, so no handoff) before the cold resume.
+                    steps.append(MigrationStep("copy", mv.wid))
+                    steps.append(MigrationStep("resume", mv.wid))
+                if tel.enabled:
+                    rsp.set(n_resumed=len(plan.disruptive))
+            # The engine already priced this exact plan (same state, same
+            # bytes_for) when it scored the commit; fresh deployments priced at
+            # zero there, so the totals are the executed moves' totals.
+            cost = plan.cost
+            if cost is None:  # plans from older call sites: price once here
+                cost = self.engine.cost_model.price(
+                    plan, self.state, bytes_for=self.engine.bytes_for
+                )
+            bytes_moved = cost.total_bytes
+            downtime = cost.downtime_seconds
+            if tel.enabled:
+                sp.set(n_steps=len(steps), n_waves=len(plan.waves),
+                       n_drained=len(drained), n_handoffs=len(handoffs),
+                       bytes_moved=bytes_moved, downtime_seconds=downtime)
+                tel.metrics.counter(
+                    "kv_handoffs_total", "replicas whose live KV moved with them",
+                ).inc(float(len(handoffs)))
         return ExecutionReport(
             steps=steps,
             drained=drained,
