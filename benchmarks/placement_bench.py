@@ -29,6 +29,12 @@ controller x rate-scale x commit-mode, columns SLO attainment / GPUs-used /
 disruption-minutes.  ``static`` rows are the peak-provisioned baseline the
 closed loop must beat.
 
+``--calibrated CALIBRATION.json`` (with ``--autoscale``) re-runs the grid
+on a measured ``PerfModel`` loaded from the kernel calibration artifact
+(``benchmarks/calibrate.py``): rows gain ``@cal`` variants and the report
+a ``calibration_delta`` section — how far the hand-written rate table was
+from measured kernel rates, in attainment and GPUs-used.
+
 ``--fleet-scale`` benchmarks the vectorized placement fabric
 (core/fabric.py) against the scalar path on large fleets: per size, one
 deploy of a ~60%-load test case through first_fit and rule_based with the
@@ -53,10 +59,8 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
-import json
 import logging
 import math
-import os
 import sys
 import time
 from typing import Dict, Optional, Sequence
@@ -336,15 +340,20 @@ def run_autoscale(
     commit_modes: Sequence[str],
     compact_every: Optional[float],
     autoscale_every: float,
+    perf: Optional[PerfModel] = None,
 ) -> Dict[str, Dict[str, float]]:
     """Rate-sweep x controller x commit grid over the demand scenario.
 
     ``static`` rows provision every model for its PEAK rate up front and
     never scale — the over-provisioning baseline the closed loop must beat
     on time-averaged GPUs at equal-or-better SLO attainment.
+
+    ``perf`` swaps the service-rate model the whole loop plans with — pass
+    ``PerfModel.from_calibration(...)`` to run on measured kernel rates
+    instead of the built-in table (the ``--calibrated`` mode).
     """
     slo = SLO(ttft_seconds=2.0, tpot_seconds=0.1, attainment_target=0.95)
-    perf = PerfModel()
+    perf = perf or PerfModel()
     out: Dict[str, Dict[str, float]] = {}
     for rate in rate_scales:
         specs, tspecs, peaks = _scenario_specs(rate, horizon, slo)
@@ -395,6 +404,38 @@ def run_autoscale(
                 key = f"{controller}@r{rate:g}@{commit}"
                 out[key] = {k: float(d[k]) for k in _AUTOSCALE_COLS}
     return out
+
+
+#: columns compared between the calibrated and table PerfModel runs.
+_DELTA_COLS = ("slo_attainment", "time_avg_gpus_used", "peak_gpus_used",
+               "ttft_p95", "n_unserved")
+
+
+def calibration_delta(
+    table_rows: Dict[str, Dict[str, float]],
+    cal_rows: Dict[str, Dict[str, float]],
+) -> Dict[str, Dict[str, float]]:
+    """Calibrated-minus-table deltas per grid row: how much the planning
+    answer moves when measured kernel rates replace the hand-written
+    table — the headline of the ``--calibrated`` mode."""
+    out: Dict[str, Dict[str, float]] = {}
+    for key, cal in cal_rows.items():
+        tab = table_rows.get(key)
+        if tab is None:
+            continue
+        out[key] = {c: cal[c] - tab[c] for c in _DELTA_COLS}
+    return out
+
+
+def print_calibration_delta(delta: Dict[str, Dict[str, float]]) -> None:
+    log.info("\n== calibrated - table deltas (measured kernel rates vs "
+             "built-in planning numbers) ==")
+    width = max(30, max((len(a) for a in delta), default=0) + 2)
+    log.info("controller".ljust(width)
+             + "".join(c[:12].rjust(13) for c in _DELTA_COLS))
+    for a, row in delta.items():
+        log.info(a.ljust(width)
+                 + "".join(f"{row[c]:+13.3f}" for c in _DELTA_COLS))
 
 
 def print_autoscale_table(table: Dict[str, Dict[str, float]], header: str) -> None:
@@ -494,34 +535,12 @@ def print_fleet_scale(n_gpus: int, rows: Dict[str, Dict[str, float]]) -> None:
 
 
 def write_json(path: str, report: Dict) -> None:
-    """Write (merging into an existing report, so e.g. a ``--trace`` run and
-    an ``--autoscale`` run can share one ``BENCH_placement.json``).
-
-    Output is strict JSON: non-finite floats (the fleet-scale table's
-    ``nan`` speedup placeholders, for instance) are sanitized to ``null``
-    before serialization and ``allow_nan=False`` enforces it — parsers that
-    reject the bare ``NaN`` token can always read ``BENCH_*.json``.
-    """
-    if not path:
-        return
-    merged: Dict = {}
-    if os.path.exists(path):
-        try:
-            with open(path) as f:
-                prev = json.load(f)
-            if isinstance(prev, dict) and str(
-                prev.get("schema", "")
-            ).startswith("placement_bench/"):
-                merged = prev
-        except (OSError, ValueError):
-            pass  # unreadable previous report: start fresh
-    merged.update(report)
-    merged["schema"] = "placement_bench/v1"
-    merged["generated_unix"] = time.time()
-    with open(path, "w") as f:
-        json.dump(obs.sanitize_json(merged), f, indent=2, sort_keys=True,
-                  allow_nan=False)
-    log.info(f"wrote {path}")
+    """Write via the shared strict-JSON report writer (``obs.write_report``):
+    sections merge into an existing ``placement_bench/*`` report (so a
+    ``--trace`` run and an ``--autoscale`` run can share one file) and
+    non-finite floats serialize as ``null``, never ``NaN``."""
+    if obs.write_report(path, report, "placement_bench/v1"):
+        log.info(f"wrote {path}")
 
 
 # ---------------------------------------------------------------------------
@@ -599,6 +618,12 @@ def main() -> None:
                     "fixed replicas (the over-provisioning baseline)")
     ap.add_argument("--autoscale-every", type=float, default=5.0,
                     help="control-tick period (simulated seconds)")
+    ap.add_argument("--calibrated", default=None, metavar="CALIBRATION.json",
+                    help="run the autoscale grid a second time on a "
+                    "measured PerfModel loaded from this calibration "
+                    "artifact (benchmarks/calibrate.py output); rows gain "
+                    "an @cal variant and the report a calibration_delta "
+                    "section (calibrated-minus-table attainment/GPUs)")
     # fleet-scale mode
     ap.add_argument("--fleet-scale", type=int, nargs="+", default=None,
                     metavar="N", help="fleet sizes for the fabric-vs-scalar "
@@ -629,6 +654,8 @@ def main() -> None:
         tel = obs.enable()
 
     report: Dict = {"args": {k: v for k, v in vars(args).items() if k != "json"}}
+    # contended-host guard: timings next to a stale pytest/bench are suspect
+    report["host"] = obs.host_snapshot()
 
     def _finish(rep: Dict) -> None:
         if tel is not None:
@@ -650,17 +677,37 @@ def main() -> None:
     if args.autoscale:
         n_a100 = args.gpus[0]
         t0 = time.time()
-        table = run_autoscale(
+        grid_args = (
             args.policies[0], n_a100, args.seed, args.horizon,
             args.rate_scale, args.controller, args.commit,
             args.compact_every if args.compact_every > 0 else None,
             args.autoscale_every,
         )
+        table = run_autoscale(*grid_args)
         print_autoscale_table(
             table,
             f"{n_a100}x A100, horizon {args.horizon}, "
             f"policy {args.policies[0]}",
         )
+        if args.calibrated:
+            perf_cal = PerfModel.from_calibration(args.calibrated)
+            whole = perf_cal.device_throughput(A100_80GB)
+            log.info(
+                f"\ncalibrated PerfModel from {args.calibrated}: "
+                f"prefill {whole.prefill_tokens_per_s:.0f} tok/s, decode "
+                f"{whole.decode_tokens_per_s:.0f} tok/s, "
+                f"e={perf_cal.parallel_efficiency:.3f}"
+            )
+            cal_table = run_autoscale(*grid_args, perf=perf_cal)
+            print_autoscale_table(
+                cal_table, f"CALIBRATED rates, {n_a100}x A100"
+            )
+            delta = calibration_delta(table, cal_table)
+            print_calibration_delta(delta)
+            table = dict(table)
+            table.update({f"{k}@cal": v for k, v in cal_table.items()})
+            report["calibration_delta"] = delta
+            report["calibration_source"] = args.calibrated
         log.debug(f"   ({time.time() - t0:.0f}s)")
         report["autoscale"] = table
         _finish(report)

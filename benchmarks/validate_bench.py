@@ -1,55 +1,79 @@
-"""Strict-parse + schema-check ``BENCH_*.json`` reports (CI gate).
+"""Strict-parse + schema-check bench artifacts, and the perf regression gate.
 
-The bench promises *strict* JSON — no bare ``NaN``/``Infinity`` tokens —
-and a stable top-level shape (``schema: placement_bench/v1`` plus at least
-one result section).  CI runs this validator over every report the smoke
-steps produced, so a regression in ``write_json`` (or a new section that
-forgets to sanitize) fails the build instead of silently shipping a file
-half the world's JSON parsers reject.
+Two jobs, both CI-facing:
 
-    python -m benchmarks.validate_bench BENCH_placement.json [...]
+**Schema validation.**  Every machine-readable artifact the benches emit
+promises *strict* JSON (no bare ``NaN``/``Infinity`` tokens) and a stable
+shape, dispatched on the ``schema`` field:
 
-Exits non-zero listing every violation.  When a report carries a
-``planner_latency`` section (``--telemetry`` runs), each entry must have
-count/total_s/p50_s/p95_s/p99_s with p50 <= p95 <= p99.
+* ``placement_bench/v1`` — ``BENCH_*.json`` from ``placement_bench``: at
+  least one result section, monotone ``planner_latency`` percentiles;
+* ``kernel_bench/v1``    — ``BENCH_kernels.json`` from ``kernel_bench``:
+  non-empty per-kernel rows with ``p50_us <= p95_us``;
+* ``calibration/v1``     — ``CALIBRATION.json`` from ``calibrate``:
+  per-device whole-device rates (positive, finite), a fitted
+  ``parallel_efficiency`` in (0, 1], and raw measurement rows.
+
+**Regression gate** (``--baseline``).  Compares the current reports'
+planner-latency p50/p95 and kernel-wall p50/p95 against a committed
+``BENCH_baseline.json`` with a fractional tolerance; any metric that
+drifts past ``baseline * (1 + tolerance)`` is a violation and the exit
+code goes non-zero — unless ``--warn-only`` (the CI setting until a
+baseline taken on quiet dedicated hardware is committed, and the right
+mode whenever ``host.contended`` is true in a report).  Create or refresh
+the baseline from the current reports with ``--write-baseline``.
+
+    python -m benchmarks.validate_bench BENCH_placement.json ...
+    python -m benchmarks.validate_bench BENCH_kernels.json \\
+        --baseline BENCH_baseline.json [--tolerance 0.5] [--warn-only]
+    python -m benchmarks.validate_bench BENCH_kernels.json \\
+        --baseline BENCH_baseline.json --write-baseline
+
+Exits non-zero listing every violation.
 """
 import argparse
 import json
+import math
 import sys
-from typing import List
+import time
+from typing import Dict, List, Tuple
 
-SCHEMA = "placement_bench/v1"
-#: at least one of these result sections must be present
+PLACEMENT_SCHEMA = "placement_bench/v1"
+KERNEL_SCHEMA = "kernel_bench/v1"
+CALIBRATION_SCHEMA = "calibration/v1"
+BASELINE_SCHEMA = "bench_baseline/v1"
+
+#: at least one of these result sections must be present (placement).
 SECTIONS = ("snapshot", "trace", "autoscale", "fleet_scale")
 PCTL_KEYS = ("count", "total_s", "p50_s", "p95_s", "p99_s")
+#: default fractional headroom before a drift counts as a regression.
+DEFAULT_TOLERANCE = 0.5
 
 
 def _reject_constant(token: str):
     raise ValueError(f"non-strict JSON constant {token!r}")
 
 
-def validate(path: str) -> List[str]:
-    """All violations found in one report file (empty list = valid)."""
-    errors: List[str] = []
-    try:
-        with open(path) as f:
-            # parse_constant fires on NaN/Infinity/-Infinity — the exact
-            # tokens json.dump(allow_nan=True) would have emitted.
-            rep = json.load(f, parse_constant=_reject_constant)
-    except (OSError, ValueError) as e:
-        return [f"{path}: unreadable or non-strict JSON: {e}"]
+def _load_strict(path: str):
+    with open(path) as f:
+        # parse_constant fires on NaN/Infinity/-Infinity — the exact
+        # tokens json.dump(allow_nan=True) would have emitted.
+        return json.load(f, parse_constant=_reject_constant)
 
-    if not isinstance(rep, dict):
-        return [f"{path}: top level is {type(rep).__name__}, expected object"]
-    if rep.get("schema") != SCHEMA:
-        errors.append(f"{path}: schema={rep.get('schema')!r}, expected {SCHEMA!r}")
-    if not isinstance(rep.get("generated_unix"), (int, float)):
-        errors.append(f"{path}: missing numeric generated_unix")
-    if not isinstance(rep.get("args"), dict):
-        errors.append(f"{path}: missing args object")
+
+def _check_host(path: str, rep: Dict, errors: List[str]) -> None:
+    host = rep.get("host")
+    if host is None:
+        return  # optional section (older reports)
+    if not isinstance(host, dict) or not isinstance(
+        host.get("contended"), bool
+    ):
+        errors.append(f"{path}: host section lacks boolean 'contended'")
+
+
+def _validate_placement(path: str, rep: Dict, errors: List[str]) -> None:
     if not any(k in rep for k in SECTIONS):
         errors.append(f"{path}: no result section (one of {SECTIONS})")
-
     lat = rep.get("planner_latency")
     if lat is not None:
         if not isinstance(lat, dict):
@@ -71,19 +95,250 @@ def validate(path: str) -> List[str]:
                     errors.append(
                         f"{path}: planner_latency[{verb!r}] empty ({row})"
                     )
+
+
+def _validate_kernels(path: str, rep: Dict, errors: List[str]) -> None:
+    kernels = rep.get("kernels")
+    if not isinstance(kernels, dict) or not kernels:
+        errors.append(f"{path}: missing non-empty kernels object")
+        return
+    for key, row in kernels.items():
+        if not isinstance(row, dict):
+            errors.append(f"{path}: kernels[{key!r}] is not an object")
+            continue
+        missing = [k for k in ("p50_us", "p95_us", "reps") if k not in row]
+        if missing:
+            errors.append(f"{path}: kernels[{key!r}] missing {missing}")
+            continue
+        if not row["p50_us"] <= row["p95_us"]:
+            errors.append(
+                f"{path}: kernels[{key!r}] p50 > p95: {row['p50_us']} > "
+                f"{row['p95_us']}"
+            )
+        if row["reps"] <= 0 or row["p50_us"] <= 0:
+            errors.append(f"{path}: kernels[{key!r}] non-positive ({row})")
+
+
+def _validate_calibration(path: str, rep: Dict, errors: List[str]) -> None:
+    devices = rep.get("devices")
+    if not isinstance(devices, dict) or not devices:
+        errors.append(f"{path}: missing non-empty devices object")
+        return
+    for name, entry in devices.items():
+        whole = entry.get("whole_device") if isinstance(entry, dict) else None
+        if not isinstance(whole, dict):
+            errors.append(f"{path}: devices[{name!r}] missing whole_device")
+            continue
+        for k in ("prefill_tokens_per_s", "decode_tokens_per_s"):
+            v = whole.get(k)
+            if not isinstance(v, (int, float)) or not math.isfinite(v) or v <= 0:
+                errors.append(
+                    f"{path}: devices[{name!r}].whole_device.{k} not a "
+                    f"positive finite number: {v!r}"
+                )
+        e = entry.get("parallel_efficiency")
+        if not isinstance(e, (int, float)) or not 0.0 < e <= 1.0:
+            errors.append(
+                f"{path}: devices[{name!r}].parallel_efficiency not in "
+                f"(0, 1]: {e!r}"
+            )
+        if not entry.get("profiles"):
+            errors.append(f"{path}: devices[{name!r}] has no profiles")
+    kernels = rep.get("kernels")
+    if not isinstance(kernels, list) or not kernels:
+        errors.append(f"{path}: missing non-empty kernels measurement list")
+    else:
+        for i, row in enumerate(kernels):
+            missing = [
+                k for k in ("kernel", "device", "profile_id", "wall_s")
+                if not isinstance(row, dict) or k not in row
+            ]
+            if missing:
+                errors.append(f"{path}: kernels[{i}] missing {missing}")
+
+
+_VALIDATORS = {
+    PLACEMENT_SCHEMA: _validate_placement,
+    KERNEL_SCHEMA: _validate_kernels,
+    CALIBRATION_SCHEMA: _validate_calibration,
+}
+
+
+def validate(path: str) -> List[str]:
+    """All violations found in one report file (empty list = valid)."""
+    errors: List[str] = []
+    try:
+        rep = _load_strict(path)
+    except (OSError, ValueError) as e:
+        return [f"{path}: unreadable or non-strict JSON: {e}"]
+
+    if not isinstance(rep, dict):
+        return [f"{path}: top level is {type(rep).__name__}, expected object"]
+    schema = rep.get("schema")
+    checker = _VALIDATORS.get(schema)
+    if checker is None:
+        return [
+            f"{path}: schema={schema!r}, expected one of "
+            f"{sorted(_VALIDATORS)}"
+        ]
+    if not isinstance(rep.get("generated_unix"), (int, float)):
+        errors.append(f"{path}: missing numeric generated_unix")
+    if schema != CALIBRATION_SCHEMA and not isinstance(rep.get("args"), dict):
+        errors.append(f"{path}: missing args object")
+    _check_host(path, rep, errors)
+    checker(path, rep, errors)
     return errors
+
+
+# ---------------------------------------------------------------------------
+# regression gate
+# ---------------------------------------------------------------------------
+def collect_metrics(reports: List[Tuple[str, Dict]]) -> Dict[str, Dict[str, float]]:
+    """Gate-able latency metrics from parsed reports.
+
+    Keys: ``planner_latency/<verb@policy>`` (p50/p95 seconds) and
+    ``kernels/<kernel@shape>`` (p50/p95 microseconds) — lower is better
+    for every metric the gate watches.
+    """
+    out: Dict[str, Dict[str, float]] = {}
+    for _, rep in reports:
+        if not isinstance(rep, dict):
+            continue
+        for verb, row in (rep.get("planner_latency") or {}).items():
+            if isinstance(row, dict) and "p50_s" in row and "p95_s" in row:
+                out[f"planner_latency/{verb}"] = {
+                    "p50": float(row["p50_s"]), "p95": float(row["p95_s"]),
+                }
+        if rep.get("schema") == KERNEL_SCHEMA:
+            for key, row in (rep.get("kernels") or {}).items():
+                if isinstance(row, dict) and "p50_us" in row:
+                    out[f"kernels/{key}"] = {
+                        "p50": float(row["p50_us"]), "p95": float(row["p95_us"]),
+                    }
+    return out
+
+
+def gate(
+    current: Dict[str, Dict[str, float]],
+    baseline: Dict,
+    tolerance: float = None,
+) -> Tuple[List[str], List[str]]:
+    """(violations, notes) of current metrics vs a baseline report."""
+    violations: List[str] = []
+    notes: List[str] = []
+    tol = tolerance if tolerance is not None else float(
+        baseline.get("tolerance", DEFAULT_TOLERANCE)
+    )
+    base_metrics = baseline.get("metrics") or {}
+    for key, base in base_metrics.items():
+        cur = current.get(key)
+        if cur is None:
+            notes.append(f"baseline metric {key!r} absent from current "
+                         f"reports (renamed or dropped?)")
+            continue
+        for q in ("p50", "p95"):
+            b, c = base.get(q), cur.get(q)
+            if b is None or c is None or b <= 0:
+                continue
+            if c > b * (1.0 + tol):
+                violations.append(
+                    f"{key} {q}: {c:.6g} exceeds baseline {b:.6g} "
+                    f"by more than {tol:.0%}"
+                )
+            elif c < b / (1.0 + tol):
+                notes.append(
+                    f"{key} {q}: {c:.6g} well below baseline {b:.6g} — "
+                    f"consider refreshing the baseline (--write-baseline)"
+                )
+    for key in current:
+        if key not in base_metrics:
+            notes.append(f"new metric {key!r} not in baseline yet")
+    return violations, notes
+
+
+def write_baseline(path: str, current: Dict[str, Dict[str, float]],
+                   tolerance: float) -> None:
+    with open(path, "w") as f:
+        json.dump(
+            {
+                "schema": BASELINE_SCHEMA,
+                "generated_unix": time.time(),
+                "tolerance": tolerance,
+                "metrics": current,
+            },
+            f, indent=2, sort_keys=True, allow_nan=False,
+        )
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("reports", nargs="+", help="BENCH_*.json paths")
+    ap.add_argument("reports", nargs="+",
+                    help="BENCH_*.json / CALIBRATION.json paths")
+    ap.add_argument("--baseline", default=None, metavar="BENCH_baseline.json",
+                    help="regression-gate the reports against this baseline "
+                    "(missing file = gate skipped with a warning)")
+    ap.add_argument("--tolerance", type=float, default=None,
+                    help=f"fractional drift allowed before failing "
+                    f"(default: baseline's own, else {DEFAULT_TOLERANCE})")
+    ap.add_argument("--warn-only", action="store_true",
+                    help="report regressions but exit 0 (schema violations "
+                    "still fail) — the CI mode until a baseline from quiet "
+                    "dedicated hardware is committed")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="write/refresh the --baseline file from the "
+                    "current reports instead of gating")
     args = ap.parse_args(argv)
+
     failures: List[str] = []
+    parsed: List[Tuple[str, Dict]] = []
     for path in args.reports:
         errs = validate(path)
         failures.extend(errs)
         print(f"{path}: {'OK' if not errs else f'{len(errs)} violation(s)'}",
               file=sys.stderr)
+        if not errs:
+            parsed.append((path, _load_strict(path)))
+
+    if args.baseline:
+        current = collect_metrics(parsed)
+        if args.write_baseline:
+            tol = args.tolerance if args.tolerance is not None else DEFAULT_TOLERANCE
+            write_baseline(args.baseline, current, tol)
+            print(f"wrote baseline {args.baseline} "
+                  f"({len(current)} metric(s), tolerance {tol:.0%})",
+                  file=sys.stderr)
+        else:
+            try:
+                baseline = _load_strict(args.baseline)
+            except OSError:
+                print(f"regression gate SKIPPED: no baseline at "
+                      f"{args.baseline} (commit one with --write-baseline)",
+                      file=sys.stderr)
+                baseline = None
+            except ValueError as e:
+                failures.append(f"{args.baseline}: unreadable baseline: {e}")
+                baseline = None
+            if baseline is not None:
+                if baseline.get("schema") != BASELINE_SCHEMA:
+                    failures.append(
+                        f"{args.baseline}: schema="
+                        f"{baseline.get('schema')!r}, expected "
+                        f"{BASELINE_SCHEMA!r}"
+                    )
+                else:
+                    violations, notes = gate(current, baseline, args.tolerance)
+                    for n in notes:
+                        print(f"  note: {n}", file=sys.stderr)
+                    if violations and args.warn_only:
+                        for v in violations:
+                            print(f"  WARN (gate): {v}", file=sys.stderr)
+                        print(f"regression gate: {len(violations)} drift(s) "
+                              f"— warn-only, not failing", file=sys.stderr)
+                    else:
+                        failures.extend(f"gate: {v}" for v in violations)
+                        if not violations:
+                            print("regression gate: OK", file=sys.stderr)
+
     for e in failures:
         print(f"  {e}", file=sys.stderr)
     return 1 if failures else 0

@@ -15,14 +15,19 @@ throughput pair to per-profile (prefill tokens/s, decode tokens/s) via the
 profile's compute/memory fractions, optionally raised to a
 ``parallel_efficiency`` exponent <= 1 (sublinear scaling of small slices;
 still monotone: a bigger slice never serves slower).  Whole-device numbers
-come from a built-in table, a user calibration dict, or a ``calibrator``
-hook — e.g. a roofline pass (``benchmarks/roofline.py``) measuring the real
-hardware, which is why the hook takes the ``DeviceModel`` itself.
+come from a user calibration dict, a ``calibrator`` hook, or a built-in
+table, in that order — measurements outrank planning numbers.  The kernel
+calibration profiler (``repro.obs.profile`` via ``benchmarks/calibrate.py``)
+produces a ``CALIBRATION.json`` artifact that
+:meth:`PerfModel.from_calibration` loads straight into the calibration
+dict, so autoscaling and SLO attainment can plan on measured rates.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, Optional, Tuple
+import json
+import os
+from typing import Callable, Dict, Mapping, Optional, Tuple, Union
 
 from .profiles import DeviceModel
 
@@ -65,9 +70,17 @@ _FALLBACK_PER_GB = DeviceThroughput(150.0, 15.0)
 class PerfModel:
     """Profile -> service-rate mapping with optional calibration.
 
-    ``calibration`` overrides the built-in table per device name;
-    ``calibrator`` is consulted (once per device, cached) when neither table
-    has the device — wire a roofline measurement pass here.
+    Throughput sources, highest precedence first:
+
+    1. ``calibration`` — explicit measured table per device name
+       (``PerfModel.from_calibration`` builds one from the profiler's
+       ``CALIBRATION.json``);
+    2. ``calibrator`` — a measurement hook (e.g. the kernel profiler or a
+       roofline pass), consulted once per device and cached.  A supplied
+       hook *beats the built-in table*: measurements outrank the
+       hand-written planning numbers;
+    3. the built-in ``DEVICE_THROUGHPUT`` table;
+    4. a conservative per-memory-GB fallback for unknown devices.
     """
 
     calibration: Optional[Dict[str, DeviceThroughput]] = None
@@ -88,19 +101,65 @@ class PerfModel:
     def device_throughput(self, device: DeviceModel) -> DeviceThroughput:
         if self.calibration and device.name in self.calibration:
             return self.calibration[device.name]
+        cache = self.__dict__.setdefault("_hook_cache", {})
+        if self.calibrator is not None:
+            if device.name not in cache:
+                cache[device.name] = self.calibrator(device)
+            return cache[device.name]
         if device.name in DEVICE_THROUGHPUT:
             return DEVICE_THROUGHPUT[device.name]
-        cache = self.__dict__.setdefault("_hook_cache", {})
-        if device.name in cache:
-            return cache[device.name]
-        if self.calibrator is not None:
-            tp = self.calibrator(device)
-        else:
+        if device.name not in cache:
             gb = float(getattr(device, "mem_per_slice_gb", 10) or 10)
             total_gb = gb * device.n_memory_slices
-            tp = _FALLBACK_PER_GB.scaled(total_gb, total_gb)
-        cache[device.name] = tp
-        return tp
+            cache[device.name] = _FALLBACK_PER_GB.scaled(total_gb, total_gb)
+        return cache[device.name]
+
+    # -- calibration artifact loader ---------------------------------------
+    @classmethod
+    def from_calibration(
+        cls,
+        source: Union[str, "os.PathLike[str]", Mapping],
+        parallel_efficiency: Optional[float] = None,
+    ) -> "PerfModel":
+        """Build a measured PerfModel from the kernel profiler's artifact.
+
+        ``source`` is a ``CALIBRATION.json`` path or the already-parsed
+        report dict (``repro.obs.profile.run_calibration`` output).  Each
+        device's ``whole_device`` rates become the calibration table entry
+        and the profiler's fitted ``parallel_efficiency`` (mean across
+        devices, clamped to (0, 1]) becomes the scaling exponent unless
+        overridden.
+        """
+        if isinstance(source, Mapping):
+            rep = source
+        else:
+            with open(source) as f:
+                rep = json.load(f)
+        schema = str(rep.get("schema", "calibration/v1"))
+        if not schema.startswith("calibration/"):
+            raise ValueError(f"not a calibration artifact (schema={schema!r})")
+        devices = rep.get("devices") or {}
+        if not devices:
+            raise ValueError("calibration artifact has no devices section")
+        table: Dict[str, DeviceThroughput] = {}
+        effs = []
+        for name, entry in devices.items():
+            whole = entry.get("whole_device") or {}
+            prefill = float(whole.get("prefill_tokens_per_s", 0.0))
+            decode = float(whole.get("decode_tokens_per_s", 0.0))
+            if prefill <= 0.0 or decode <= 0.0:
+                raise ValueError(
+                    f"device {name!r}: non-positive whole-device rates "
+                    f"({prefill}, {decode})"
+                )
+            table[name] = DeviceThroughput(prefill, decode)
+            e = entry.get("parallel_efficiency")
+            if isinstance(e, (int, float)):
+                effs.append(float(e))
+        if parallel_efficiency is None:
+            parallel_efficiency = sum(effs) / len(effs) if effs else 1.0
+            parallel_efficiency = min(max(parallel_efficiency, 1e-3), 1.0)
+        return cls(calibration=table, parallel_efficiency=parallel_efficiency)
 
     # -- per-profile --------------------------------------------------------
     def rates(self, device: DeviceModel, profile_id: int) -> Tuple[float, float]:

@@ -30,6 +30,12 @@ Layers (see the submodules for detail):
   JSONL span/event dumps.
 * :mod:`repro.obs.report`  — per-verb latency tables and an ASCII/HTML
   timeline of migration windows and autoscale decisions.
+* :mod:`repro.obs.host`    — host-contention guard for bench entrypoints
+  (stale ``pytest``/bench processes, load average) -> ``contended`` flag.
+* :mod:`repro.obs.profile` — kernel calibration profiler: measures the
+  ``repro.kernels`` ops under MIG-profile-shaped budgets and builds the
+  ``CALIBRATION.json`` artifact ``PerfModel.from_calibration`` consumes.
+  (Imported lazily — ``repro.obs`` itself stays importable without JAX.)
 """
 from __future__ import annotations
 
@@ -37,7 +43,14 @@ import contextlib
 import dataclasses
 from typing import Iterator, Optional, Union
 
-from .export import iter_jsonl, prometheus_text, sanitize_json, write_jsonl
+from .export import (
+    iter_jsonl,
+    prometheus_text,
+    sanitize_json,
+    write_jsonl,
+    write_report,
+)
+from .host import host_snapshot
 from .metrics import (
     Counter,
     Gauge,
@@ -69,6 +82,8 @@ __all__ = [
     "write_jsonl",
     "iter_jsonl",
     "sanitize_json",
+    "write_report",
+    "host_snapshot",
 ]
 
 

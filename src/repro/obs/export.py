@@ -13,6 +13,7 @@ from __future__ import annotations
 import json
 import math
 import os
+import time
 from typing import Any, Dict, Iterable, Iterator, List, TextIO, Union
 
 from .metrics import Counter, Gauge, Histogram, MetricsRegistry
@@ -22,6 +23,7 @@ __all__ = [
     "sanitize_json",
     "write_jsonl",
     "iter_jsonl",
+    "write_report",
 ]
 
 
@@ -37,6 +39,45 @@ def sanitize_json(obj: Any) -> Any:
     if obj is None or isinstance(obj, (bool, int, str)):
         return obj
     return str(obj)
+
+
+def write_report(
+    path: Union[str, "os.PathLike[str]", None],
+    report: Dict[str, Any],
+    schema: str,
+    merge: bool = True,
+) -> bool:
+    """Write a ``BENCH_*.json`` / ``CALIBRATION.json``-style report: strict
+    JSON (non-finite floats sanitized to ``null``, ``allow_nan=False``),
+    stamped with ``schema`` and ``generated_unix``.
+
+    Every machine-readable artifact in the repo goes through this one
+    writer so the :mod:`benchmarks.validate_bench` CI gate's strictness
+    promise holds by construction.  With ``merge=True`` (default) the new
+    sections are merged over an existing report of the same schema family
+    (``"placement_bench/v1"`` merges onto any ``"placement_bench/*"``),
+    so e.g. a ``--trace`` run and an ``--autoscale`` run can share one
+    file.  Returns True when a file was written (``path`` falsy = no-op).
+    """
+    if not path:
+        return False
+    family = schema.split("/", 1)[0] + "/"
+    merged: Dict[str, Any] = {}
+    if merge and os.path.exists(path):
+        try:
+            with open(path) as f:
+                prev = json.load(f)
+            if isinstance(prev, dict) and str(prev.get("schema", "")).startswith(family):
+                merged = prev
+        except (OSError, ValueError):
+            pass  # unreadable previous report: start fresh
+    merged.update(report)
+    merged["schema"] = schema
+    merged["generated_unix"] = time.time()
+    with open(path, "w") as f:
+        json.dump(sanitize_json(merged), f, indent=2, sort_keys=True,
+                  allow_nan=False)
+    return True
 
 
 def _fmt(v: float) -> str:

@@ -1,0 +1,389 @@
+"""Kernel calibration observatory tests.
+
+Covers the measure -> model -> plan loop:
+
+- ``PerfModel`` throughput-source precedence (calibration dict beats
+  calibrator hook beats built-in table) and one-call-per-device caching of
+  the calibrator;
+- ``PerfModel.from_calibration`` round-tripping the profiler's
+  ``CALIBRATION.json`` schema (and rejecting malformed artifacts);
+- the ``repro.obs.profile`` sweep: schema-valid artifact, per-rep
+  ``kernel_wall_seconds`` observations, slice-shaped problem scaling;
+- ``benchmarks.kernel_bench._timeit`` invoking the op exactly once per
+  rep (the historical double-invoke bug) and emitting strict JSON;
+- the host-contention guard;
+- the ``validate_bench`` schema dispatch and ``--baseline`` regression
+  gate exiting non-zero on drift (the PR's acceptance demonstration);
+- ``placement_bench --autoscale --calibrated`` end-to-end on an artifact
+  produced by ``benchmarks.calibrate``.
+"""
+import json
+import math
+import sys
+
+import pytest
+
+from repro import obs
+from repro.core.perfmodel import DEVICE_THROUGHPUT, DeviceThroughput, PerfModel
+from repro.core.profiles import A100_80GB, H100_96GB
+
+jax = pytest.importorskip("jax")
+
+from benchmarks import calibrate, kernel_bench, validate_bench  # noqa: E402
+from repro.obs import profile  # noqa: E402
+
+
+@pytest.fixture(autouse=True)
+def _isolated_telemetry():
+    yield
+    obs.disable()
+
+
+# ---------------------------------------------------------------------------
+# PerfModel precedence + caching
+# ---------------------------------------------------------------------------
+class TestPerfModelPrecedence:
+    def test_builtin_table_is_the_default(self):
+        pm = PerfModel()
+        assert pm.device_throughput(A100_80GB) == DEVICE_THROUGHPUT["A100-80GB"]
+
+    def test_calibrator_beats_builtin_table(self):
+        measured = DeviceThroughput(123.0, 45.0)
+        pm = PerfModel(calibrator=lambda d: measured)
+        assert pm.device_throughput(A100_80GB) == measured
+
+    def test_calibration_dict_beats_calibrator(self):
+        explicit = DeviceThroughput(999.0, 99.0)
+        pm = PerfModel(
+            calibration={"A100-80GB": explicit},
+            calibrator=lambda d: DeviceThroughput(1.0, 1.0),
+        )
+        assert pm.device_throughput(A100_80GB) == explicit
+        # the hook still wins for devices the dict doesn't cover
+        assert pm.device_throughput(H100_96GB) == DeviceThroughput(1.0, 1.0)
+
+    def test_calibrator_consulted_once_per_device(self):
+        calls = []
+
+        def hook(device):
+            calls.append(device.name)
+            return DeviceThroughput(100.0, 10.0)
+
+        pm = PerfModel(calibrator=hook)
+        for _ in range(5):
+            pm.device_throughput(A100_80GB)
+            pm.rates(A100_80GB, 9)
+        pm.device_throughput(H100_96GB)
+        pm.device_throughput(H100_96GB)
+        assert calls == ["A100-80GB", "H100-96GB"]
+
+    def test_unknown_device_falls_back_to_per_gb_estimate(self):
+        import dataclasses
+        ghost = dataclasses.replace(A100_80GB, name="GHOST-1")
+        tp = PerfModel().device_throughput(ghost)
+        assert tp.prefill_tokens_per_s > 0 and tp.decode_tokens_per_s > 0
+
+
+class TestFromCalibration:
+    def _report(self, prefill=50_000.0, decode=4_000.0, eff=0.8):
+        return {
+            "schema": "calibration/v1",
+            "devices": {
+                "A100-80GB": {
+                    "whole_device": {
+                        "prefill_tokens_per_s": prefill,
+                        "decode_tokens_per_s": decode,
+                    },
+                    "parallel_efficiency": eff,
+                    "profiles": {"0": {"name": "7g.80gb"}},
+                }
+            },
+        }
+
+    def test_loads_rates_and_fitted_exponent(self):
+        pm = PerfModel.from_calibration(self._report())
+        assert pm.device_throughput(A100_80GB) == DeviceThroughput(50_000.0, 4_000.0)
+        assert pm.parallel_efficiency == pytest.approx(0.8)
+        # the exponent shapes sub-device rates: 3g gets (3/7)^0.8 of prefill
+        prefill, _ = pm.rates(A100_80GB, 9)
+        assert prefill == pytest.approx(50_000.0 * (3 / 7) ** 0.8)
+
+    def test_explicit_exponent_overrides_fitted(self):
+        pm = PerfModel.from_calibration(self._report(eff=0.5),
+                                        parallel_efficiency=1.0)
+        assert pm.parallel_efficiency == 1.0
+
+    def test_rejects_wrong_schema_and_bad_rates(self):
+        with pytest.raises(ValueError, match="schema"):
+            PerfModel.from_calibration({"schema": "placement_bench/v1"})
+        with pytest.raises(ValueError, match="devices"):
+            PerfModel.from_calibration({"schema": "calibration/v1",
+                                        "devices": {}})
+        bad = self._report(prefill=0.0)
+        with pytest.raises(ValueError, match="non-positive"):
+            PerfModel.from_calibration(bad)
+
+    def test_reads_from_file(self, tmp_path):
+        path = tmp_path / "CALIBRATION.json"
+        path.write_text(json.dumps(self._report()))
+        pm = PerfModel.from_calibration(path)
+        assert pm.device_throughput(A100_80GB).prefill_tokens_per_s == 50_000.0
+
+
+# ---------------------------------------------------------------------------
+# the profiler sweep (tiny preset, 1 rep: structure over statistics)
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def tiny_artifact(tmp_path_factory):
+    """One tiny calibration sweep shared by the round-trip tests."""
+    out = tmp_path_factory.mktemp("cal") / "CALIBRATION.json"
+    rc = calibrate.main(
+        ["--preset", "tiny", "--reps", "1", "--warmup", "0",
+         "--out", str(out)]
+    )
+    assert rc == 0
+    return out
+
+
+class TestProfilerSweep:
+    def test_artifact_is_schema_valid(self, tiny_artifact):
+        assert validate_bench.validate(str(tiny_artifact)) == []
+
+    def test_round_trip_into_perfmodel(self, tiny_artifact):
+        rep = json.loads(tiny_artifact.read_text())
+        pm = PerfModel.from_calibration(tiny_artifact)
+        whole = rep["devices"]["A100-80GB"]["whole_device"]
+        tp = pm.device_throughput(A100_80GB)
+        assert tp.prefill_tokens_per_s == pytest.approx(
+            whole["prefill_tokens_per_s"])
+        assert tp.decode_tokens_per_s == pytest.approx(
+            whole["decode_tokens_per_s"])
+        assert 0.0 < pm.parallel_efficiency <= 1.0
+        # monotone through the model: bigger profiles never serve slower
+        ladder = [0, 5, 9, 14, 15, 19]
+        rates = [pm.rates(A100_80GB, pid) for pid in ladder]
+        for (p_big, d_big), (p_small, d_small) in zip(rates, rates[1:]):
+            assert p_big >= p_small and d_big >= d_small
+
+    def test_sweep_covers_distinct_profiles_and_kernels(self, tiny_artifact):
+        rep = json.loads(tiny_artifact.read_text())
+        rows = rep["kernels"]
+        kernels = {r["kernel"] for r in rows}
+        assert kernels == {"flash_attention", "decode_attention", "ssd_scan"}
+        # A100 ladder has 6 distinct (compute, memory) footprints
+        profiles = {r["profile_id"] for r in rows}
+        assert profiles == {0, 5, 9, 14, 15, 19}
+        for r in rows:
+            assert r["wall_s"]["p50"] > 0
+            assert r["flops"] > 0 and r["bytes"] > 0
+
+    def test_problem_sizes_scale_with_slice_budget(self, tiny_artifact):
+        rep = json.loads(tiny_artifact.read_text())
+        by_prof = {
+            r["profile_id"]: r for r in rep["kernels"]
+            if r["kernel"] == "flash_attention"
+        }
+        # prefill batch shrinks with the compute fraction: 7g does 2x256
+        # tokens per call at the tiny preset, 1g does 1x256
+        assert by_prof[0]["tokens"] == 2 * 256
+        assert by_prof[19]["tokens"] == 1 * 256
+
+    def test_measure_records_obs_histograms(self):
+        with obs.enabled() as tel:
+            timing = profile.measure(
+                lambda x: x + 1.0, 1.0, reps=3, warmup=1,
+                labels={"kernel": "dummy", "device": "t", "profile": "p"},
+            )
+        assert len(timing.wall_s) == 3
+        hist = tel.metrics.get(
+            "kernel_wall_seconds",
+            labels={"kernel": "dummy", "device": "t", "profile": "p"},
+        )
+        assert hist is not None and hist.count == 3
+
+
+# ---------------------------------------------------------------------------
+# kernel_bench: the _timeit fix + strict JSON report
+# ---------------------------------------------------------------------------
+class TestKernelBench:
+    def test_timeit_invokes_exactly_once_per_rep(self):
+        calls = []
+
+        def fn(x):
+            calls.append(x)
+            return float(x)
+
+        walls = kernel_bench._timeit(fn, 7, n=3, warmup=1)
+        assert len(calls) == 4  # 1 warm-up + 3 timed — not double-invoked
+        assert len(walls) == 3 and all(w >= 0 for w in walls)
+
+    def test_emits_schema_valid_json(self, tmp_path, capsys):
+        out = tmp_path / "BENCH_kernels.json"
+        rc = kernel_bench.main(
+            ["--preset", "tiny", "--reps", "1", "--warmup", "0",
+             "--json", str(out)]
+        )
+        assert rc == 0
+        assert validate_bench.validate(str(out)) == []
+        rep = json.loads(out.read_text())
+        assert rep["schema"] == "kernel_bench/v1"
+        assert isinstance(rep["host"]["contended"], bool)
+        assert len(rep["kernels"]) == 3
+        for row in rep["kernels"].values():
+            assert row["p50_us"] <= row["p95_us"]
+        # human CSV still lands on stdout
+        assert "kernel,shape,us_per_call" in capsys.readouterr().out
+
+
+# ---------------------------------------------------------------------------
+# host-contention guard
+# ---------------------------------------------------------------------------
+class TestHostGuard:
+    def test_high_load_flags_contended(self, monkeypatch):
+        import os
+
+        from repro.obs import host
+        monkeypatch.setattr(os, "getloadavg", lambda: (999.0, 0.0, 0.0))
+        monkeypatch.setattr(host, "competing_processes", lambda **kw: [])
+        snap = host.host_snapshot(warn=False)
+        assert snap["contended"] is True
+        assert snap["load1"] == 999.0
+
+    def test_competitor_process_flags_contended(self, monkeypatch):
+        from repro.obs import host
+        monkeypatch.setattr(
+            host, "competing_processes",
+            lambda **kw: [{"pid": 4242, "cmdline": "python -m pytest"}],
+        )
+        snap = host.host_snapshot(warn=False)
+        assert snap["contended"] is True
+        assert snap["competing"][0]["pid"] == 4242
+
+    def test_snapshot_shape(self):
+        snap = obs.host_snapshot(warn=False)
+        assert set(snap) >= {"load1", "n_cpus", "competing", "contended"}
+        assert isinstance(snap["contended"], bool)
+
+
+# ---------------------------------------------------------------------------
+# validate_bench: schema dispatch + the regression gate
+# ---------------------------------------------------------------------------
+def _kernel_report(tmp_path, name, p50=100.0, p95=120.0):
+    rep = {
+        "schema": "kernel_bench/v1",
+        "generated_unix": 1.0,
+        "args": {},
+        "host": {"contended": False},
+        "kernels": {
+            "flash_attention@B8xS2048": {
+                "p50_us": p50, "p95_us": p95, "reps": 5,
+            },
+        },
+    }
+    path = tmp_path / name
+    path.write_text(json.dumps(rep))
+    return str(path)
+
+
+def _placement_report(tmp_path, name, p50=0.01, p95=0.02):
+    rep = {
+        "schema": "placement_bench/v1",
+        "generated_unix": 1.0,
+        "args": {},
+        "trace": {"rule_based": {"avg_gpus": 3.0}},
+        "planner_latency": {
+            "deploy@rule_based": {
+                "count": 10, "total_s": 0.2,
+                "p50_s": p50, "p95_s": p95, "p99_s": p95 * 1.1,
+            },
+        },
+    }
+    path = tmp_path / name
+    path.write_text(json.dumps(rep))
+    return str(path)
+
+
+class TestValidateBench:
+    def test_schema_dispatch_rejects_unknown(self, tmp_path):
+        p = tmp_path / "x.json"
+        p.write_text(json.dumps({"schema": "mystery/v9"}))
+        errs = validate_bench.validate(str(p))
+        assert errs and "schema" in errs[0]
+
+    def test_nan_token_rejected(self, tmp_path):
+        p = tmp_path / "nan.json"
+        p.write_text('{"schema": "kernel_bench/v1", "x": NaN}')
+        errs = validate_bench.validate(str(p))
+        assert errs and "non-strict" in errs[0]
+
+    def test_kernel_schema_checks_percentile_order(self, tmp_path):
+        path = _kernel_report(tmp_path, "k.json", p50=200.0, p95=100.0)
+        errs = validate_bench.validate(path)
+        assert any("p50 > p95" in e for e in errs)
+
+    def test_gate_passes_within_tolerance_and_fails_on_drift(self, tmp_path):
+        base_rep = _kernel_report(tmp_path, "base.json")
+        baseline = str(tmp_path / "BENCH_baseline.json")
+        assert validate_bench.main(
+            [base_rep, "--baseline", baseline, "--write-baseline"]
+        ) == 0
+        # identical numbers: gate OK
+        assert validate_bench.main([base_rep, "--baseline", baseline]) == 0
+        # 3x p50/p95 drift: gate exits non-zero (acceptance criterion)
+        drifted = _kernel_report(tmp_path, "drift.json", p50=300.0, p95=360.0)
+        assert validate_bench.main([drifted, "--baseline", baseline]) == 1
+        # ... unless warn-only (the CI mode before a baseline is trusted)
+        assert validate_bench.main(
+            [drifted, "--baseline", baseline, "--warn-only"]
+        ) == 0
+        # tighter explicit tolerance flips a small drift into a failure
+        small = _kernel_report(tmp_path, "small.json", p50=120.0, p95=144.0)
+        assert validate_bench.main([small, "--baseline", baseline]) == 0
+        assert validate_bench.main(
+            [small, "--baseline", baseline, "--tolerance", "0.1"]
+        ) == 1
+
+    def test_gate_covers_planner_latency(self, tmp_path):
+        base_rep = _placement_report(tmp_path, "pb.json")
+        baseline = str(tmp_path / "BENCH_baseline.json")
+        assert validate_bench.main(
+            [base_rep, "--baseline", baseline, "--write-baseline"]
+        ) == 0
+        drift = _placement_report(tmp_path, "pb2.json", p50=0.05, p95=0.10)
+        assert validate_bench.main([drift, "--baseline", baseline]) == 1
+
+    def test_missing_baseline_skips_gate(self, tmp_path):
+        rep = _kernel_report(tmp_path, "k2.json")
+        assert validate_bench.main(
+            [rep, "--baseline", str(tmp_path / "nope.json")]
+        ) == 0
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: calibrate.py artifact -> placement_bench --autoscale --calibrated
+# ---------------------------------------------------------------------------
+class TestCalibratedBenchEndToEnd:
+    def test_autoscale_calibrated_runs_and_reports_deltas(
+        self, tiny_artifact, tmp_path, monkeypatch
+    ):
+        from benchmarks import placement_bench
+
+        out = tmp_path / "BENCH_autoscale.json"
+        monkeypatch.setattr(sys, "argv", [
+            "placement_bench", "--autoscale", "--gpus", "4",
+            "--horizon", "20", "--rate-scale", "0.02",
+            "--policies", "rule_based", "--commit", "always",
+            "--controller", "slo", "--compact-every", "0",
+            "--calibrated", str(tiny_artifact), "--json", str(out),
+        ])
+        placement_bench.main()
+        assert validate_bench.validate(str(out)) == []
+        rep = json.loads(out.read_text())
+        rows = rep["autoscale"]
+        assert "slo@r0.02@always" in rows
+        assert "slo@r0.02@always@cal" in rows
+        delta = rep["calibration_delta"]["slo@r0.02@always"]
+        assert set(delta) >= {"slo_attainment", "time_avg_gpus_used"}
+        assert all(math.isfinite(v) for v in delta.values())
+        assert rep["calibration_source"] == str(tiny_artifact)
+        assert isinstance(rep["host"]["contended"], bool)
