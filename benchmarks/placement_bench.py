@@ -35,6 +35,16 @@ on a measured ``PerfModel`` loaded from the kernel calibration artifact
 a ``calibration_delta`` section — how far the hand-written rate table was
 from measured kernel rates, in attainment and GPUs-used.
 
+``--faults`` switches to the chaos mode: the demand scenario (with the
+embedding model demoted to the best-effort brownout tier) is replayed
+clean and again under a seeded ``FaultInjector`` schedule (GPU failures
+spread mid-trace + node drains at 70% horizon) per commit mode.  The
+report (``BENCH_failures.json``, schema ``failures_bench/v1``) carries
+per-run fault/recovery columns, a ``retention`` section (faulted/clean
+SLO attainment, recovery-time-to-full-capacity, capacity-lost
+GPU-seconds), the injected schedule, and the ``fault_byte_identity``
+flag — a wired-but-empty injector must reproduce the clean trace.
+
 ``--fleet-scale`` benchmarks the vectorized placement fabric
 (core/fabric.py) against the scalar path on large fleets: per size, one
 deploy of a ~60%-load test case through first_fit and rule_based with the
@@ -63,7 +73,7 @@ import logging
 import math
 import sys
 import time
-from typing import Dict, Optional, Sequence
+from typing import Dict, Optional, Sequence, Tuple
 
 from repro import obs
 from repro.core import metrics
@@ -76,6 +86,7 @@ from repro.core.events import (
     build_fleet,
     generate_trace,
 )
+from repro.core.faults import FaultInjector, FaultSpec
 from repro.core.perfmodel import PerfModel
 from repro.core.profiles import A100_80GB
 from repro.core.simulator import TestCase, generate_test_case
@@ -449,6 +460,193 @@ def print_autoscale_table(table: Dict[str, Dict[str, float]], header: str) -> No
 
 
 # ---------------------------------------------------------------------------
+# faults mode (--faults): seeded chaos over the demand scenario
+# ---------------------------------------------------------------------------
+#: TraceStats columns surfaced per fault-grid row (clean vs faulted runs).
+_FAULT_COLS = {
+    "slo_attainment": "slo_attain",
+    "ttft_p95": "ttft_p95",
+    "time_avg_gpus_used": "avg_gpus",
+    "n_requests": "requests",
+    "n_unserved": "unserved",
+    "n_requeued_requests": "requeued",
+    "n_shed_requests": "shed",
+    "n_gpu_failures": "gpu_fail",
+    "n_node_drains": "drains",
+    "n_fault_evictions": "evicted",
+    "n_fault_recovered": "recovered",
+    "n_recovery_pending": "rec_pend",
+    "recovery_seconds_total": "rec_s_tot",
+    "recovery_seconds_max": "rec_s_max",
+    "capacity_lost_gpu_seconds": "cap_lost_s",
+    "brownout_seconds": "brownout_s",
+    "n_emergency_commits": "emergency",
+    "disruption_minutes": "disrupt_min",
+    "engine_seconds": "engine_s",
+}
+
+
+def _fault_specs(
+    n_gpu_failures: int,
+    n_drains: int,
+    horizon: float,
+    mttr: float,
+    drain_duration: float,
+) -> Tuple[FaultSpec, ...]:
+    """Deterministic chaos schedule: GPU failures spread over the middle of
+    the trace (so recovery is observable before the horizon) plus node
+    drains at 70%.  Targets are drawn by the injector's seeded substreams."""
+    specs = []
+    if n_gpu_failures > 0:
+        lo, hi = 0.2, 0.6
+        ats = tuple(
+            horizon * (lo + (hi - lo) * i / max(n_gpu_failures - 1, 1))
+            for i in range(n_gpu_failures)
+        )
+        specs.append(FaultSpec(
+            kind="gpu_failure", at=ats, duration=mttr, name="bench-gpu",
+        ))
+    if n_drains > 0:
+        specs.append(FaultSpec(
+            kind="node_drain", at=(horizon * 0.7,), count=n_drains,
+            duration=drain_duration, name="bench-drain",
+        ))
+    return tuple(specs)
+
+
+def _stats_signature(stats) -> Dict[str, float]:
+    """Full TraceStats dict minus the one wall-clock field — the object the
+    injector-off byte-identity contract is checked against."""
+    d = stats.as_dict()
+    d.pop("engine_seconds", None)
+    return d
+
+
+def run_faults(
+    policy: str,
+    n_gpus: int,
+    seed: int,
+    horizon: float,
+    rate_scale: float,
+    commit_modes: Sequence[str],
+    compact_every: Optional[float],
+    autoscale_every: float,
+    n_gpu_failures: int,
+    n_drains: int,
+    fault_seed: int,
+    mttr: float,
+    drain_duration: float,
+):
+    """Clean vs faulted demand runs per commit mode over the standard
+    scenario (``embed`` demoted to the best-effort brownout tier).
+
+    Returns ``(rows, retention, byte_identity, fault_events)``:
+
+    * rows — ``{commit}@clean`` / ``{commit}@faults`` -> ``_FAULT_COLS``;
+    * retention — per commit mode, faulted/clean SLO attainment plus the
+      recovery-time and capacity-lost headline numbers;
+    * byte_identity — True iff a wired-but-empty ``FaultInjector(())``
+      reproduces the clean trace exactly (minus wall-clock timing);
+    * fault_events — the injected schedule, for reproducibility.
+    """
+    slo = SLO(ttft_seconds=2.0, tpot_seconds=0.1, attainment_target=0.95)
+    perf = PerfModel()
+    specs, tspecs, _ = _scenario_specs(rate_scale, horizon, slo)
+    specs = [
+        dataclasses.replace(s, best_effort=(s.model == "embed")) for s in specs
+    ]
+    traffic = generate_requests(tspecs, seed, horizon)
+    chaos = _fault_specs(n_gpu_failures, n_drains, horizon, mttr, drain_duration)
+
+    def _one(commit: str, faults: Optional[FaultInjector]):
+        fleet = build_fleet([(A100_80GB, n_gpus)])
+        cfg = AutoscalerConfig(mode="slo")
+        run_specs = [
+            dataclasses.replace(
+                spec,
+                initial_replicas=_static_replicas(
+                    spec, ts, ts.pattern.rate(0.0), perf,
+                    cfg.target_utilization,
+                ),
+            )
+            for spec, ts in zip(specs, tspecs)
+        ]
+        sim = DemandSimulator(
+            fleet,
+            PlacementEngine(policy, commit=commit),
+            run_specs,
+            autoscaler=Autoscaler(cfg),
+            perf=perf,
+            autoscale_every=autoscale_every,
+            compact_every=compact_every,
+            faults=faults,
+        )
+        stats = sim.run(traffic)
+        fleet.validate()
+        return stats
+
+    rows: Dict[str, Dict[str, float]] = {}
+    retention: Dict[str, Dict[str, float]] = {}
+    byte_identity: Optional[bool] = None
+    for commit in commit_modes:
+        clean = _one(commit, None)
+        if byte_identity is None:
+            # a wired-but-silent injector must not perturb the trace
+            byte_identity = (
+                _stats_signature(_one(commit, FaultInjector(())))
+                == _stats_signature(clean)
+            )
+        faulted = _one(commit, FaultInjector(chaos, seed=fault_seed))
+        for label, st in (("clean", clean), ("faults", faulted)):
+            d = st.as_dict()
+            rows[f"{commit}@{label}"] = {k: float(d[k]) for k in _FAULT_COLS}
+        c, f = clean.slo_attainment, faulted.slo_attainment
+        retention[commit] = {
+            "clean_attainment": c,
+            "faulted_attainment": f,
+            "slo_retention": f / c if c > 0 else float("nan"),
+            "recovery_seconds_max": faulted.recovery_seconds_max,
+            "recovery_seconds_total": faulted.recovery_seconds_total,
+            "capacity_lost_gpu_seconds": faulted.capacity_lost_gpu_seconds,
+            "n_recovery_pending": float(faulted.n_recovery_pending),
+            "n_requeued_requests": float(faulted.n_requeued_requests),
+            "n_shed_requests": float(faulted.n_shed_requests),
+        }
+    events = [
+        dataclasses.asdict(fe)
+        for fe in FaultInjector(chaos, seed=fault_seed).schedule(
+            build_fleet([(A100_80GB, n_gpus)]), horizon
+        )
+    ]
+    return rows, retention, byte_identity, events
+
+
+def print_fault_table(table: Dict[str, Dict[str, float]], header: str) -> None:
+    log.info(f"\n== faults: {header} ==")
+    cols = list(next(iter(table.values())).keys())
+    width = max(26, max(len(a) for a in table) + 2)
+    log.info("commit@run".ljust(width)
+             + "".join(_FAULT_COLS[c][:11].rjust(12) for c in cols))
+    for a, row in table.items():
+        log.info(a.ljust(width) + "".join(f"{row[c]:12.3f}" for c in cols))
+
+
+def print_fault_retention(retention: Dict[str, Dict[str, float]],
+                          byte_identity: bool) -> None:
+    log.info("\n== fault recovery headline (faulted vs clean) ==")
+    for commit, r in retention.items():
+        log.info(
+            f"{commit}: SLO retention {r['slo_retention']:.3f} "
+            f"({r['faulted_attainment']:.3f} / {r['clean_attainment']:.3f}), "
+            f"recovery max {r['recovery_seconds_max']:.1f}s, "
+            f"capacity lost {r['capacity_lost_gpu_seconds']:.1f} GPU-s, "
+            f"requeued {r['n_requeued_requests']:.0f}, "
+            f"shed {r['n_shed_requests']:.0f}"
+        )
+    log.info(f"injector-off byte identity: {byte_identity}")
+
+
+# ---------------------------------------------------------------------------
 # fleet-scale mode (--fleet-scale): scalar path vs vectorized fabric
 # ---------------------------------------------------------------------------
 #: metrics surfaced in the fleet-scale comparison (the acceptance metrics:
@@ -534,12 +732,13 @@ def print_fleet_scale(n_gpus: int, rows: Dict[str, Dict[str, float]]) -> None:
         log.info(a.ljust(12) + "".join(f"{row.get(c, float('nan')):11.3f}" for c in cols))
 
 
-def write_json(path: str, report: Dict) -> None:
+def write_json(path: str, report: Dict, schema: str = "placement_bench/v1") -> None:
     """Write via the shared strict-JSON report writer (``obs.write_report``):
-    sections merge into an existing ``placement_bench/*`` report (so a
+    sections merge into an existing report of the same schema family (so a
     ``--trace`` run and an ``--autoscale`` run can share one file) and
-    non-finite floats serialize as ``null``, never ``NaN``."""
-    if obs.write_report(path, report, "placement_bench/v1"):
+    non-finite floats serialize as ``null``, never ``NaN``.  ``--faults``
+    runs write a ``failures_bench/v1`` report instead."""
+    if obs.write_report(path, report, schema):
         log.info(f"wrote {path}")
 
 
@@ -624,6 +823,23 @@ def main() -> None:
                     "artifact (benchmarks/calibrate.py output); rows gain "
                     "an @cal variant and the report a calibration_delta "
                     "section (calibrated-minus-table attainment/GPUs)")
+    # faults mode
+    ap.add_argument("--faults", action="store_true",
+                    help="seeded chaos mode: clean-vs-faulted demand runs "
+                    "per commit mode; emits BENCH_failures.json "
+                    "(failures_bench/v1) with SLO retention, "
+                    "recovery-time-to-full-capacity, and "
+                    "capacity-lost-GPU-seconds")
+    ap.add_argument("--gpu-failures", type=int, default=3,
+                    help="GPU hard failures injected mid-trace")
+    ap.add_argument("--node-drains", type=int, default=1,
+                    help="simultaneous node drains injected at 70%% horizon")
+    ap.add_argument("--fault-seed", type=int, default=0,
+                    help="seed for the injector's target-selection streams")
+    ap.add_argument("--fault-mttr", type=float, default=None,
+                    help="repair time per GPU failure (default 15%% horizon)")
+    ap.add_argument("--drain-duration", type=float, default=None,
+                    help="drain length (default 20%% horizon)")
     # fleet-scale mode
     ap.add_argument("--fleet-scale", type=int, nargs="+", default=None,
                     metavar="N", help="fleet sizes for the fabric-vs-scalar "
@@ -657,11 +873,44 @@ def main() -> None:
     # contended-host guard: timings next to a stale pytest/bench are suspect
     report["host"] = obs.host_snapshot()
 
-    def _finish(rep: Dict) -> None:
+    def _finish(rep: Dict, schema: str = "placement_bench/v1") -> None:
         if tel is not None:
             rep["planner_latency"] = planner_latency_section(tel)
             dump_telemetry(tel, args.telemetry_prefix)
-        write_json(args.json, rep)
+        write_json(args.json, rep, schema)
+
+    if args.faults:
+        n_a100 = args.gpus[0]
+        if args.json == ap.get_default("json"):
+            args.json = "BENCH_failures.json"  # own artifact, own schema
+        mttr = (args.fault_mttr if args.fault_mttr is not None
+                else args.horizon * 0.15)
+        drain_dur = (args.drain_duration if args.drain_duration is not None
+                     else args.horizon * 0.2)
+        t0 = time.time()
+        rows, retention, identity, events = run_faults(
+            args.policies[0], n_a100, args.seed, args.horizon,
+            args.rate_scale[0], args.commit,
+            args.compact_every if args.compact_every > 0 else None,
+            args.autoscale_every,
+            args.gpu_failures, args.node_drains, args.fault_seed,
+            mttr, drain_dur,
+        )
+        print_fault_table(
+            rows,
+            f"{n_a100}x A100, horizon {args.horizon}, "
+            f"{args.gpu_failures} GPU failures + {args.node_drains} drain(s)",
+        )
+        print_fault_retention(retention, identity)
+        log.debug(f"   ({time.time() - t0:.0f}s)")
+        report["faults"] = {
+            "rows": rows,
+            "retention": retention,
+            "fault_byte_identity": identity,
+            "fault_events": events,
+        }
+        _finish(report, schema="failures_bench/v1")
+        return
 
     if args.fleet_scale:
         report["fleet_scale"] = {}

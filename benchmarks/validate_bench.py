@@ -10,6 +10,11 @@ shape, dispatched on the ``schema`` field:
   least one result section, monotone ``planner_latency`` percentiles;
 * ``kernel_bench/v1``    — ``BENCH_kernels.json`` from ``kernel_bench``:
   non-empty per-kernel rows with ``p50_us <= p95_us``;
+* ``failures_bench/v1``  — ``BENCH_failures.json`` from
+  ``placement_bench --faults``: non-empty fault rows with the
+  recovery columns, finite per-commit ``slo_retention`` numbers, and
+  ``fault_byte_identity`` strictly True (a wired-but-empty injector
+  must not perturb the trace);
 * ``calibration/v1``     — ``CALIBRATION.json`` from ``calibrate``:
   per-device whole-device rates (positive, finite), a fitted
   ``parallel_efficiency`` in (0, 1], and raw measurement rows.
@@ -40,6 +45,7 @@ from typing import Dict, List, Tuple
 
 PLACEMENT_SCHEMA = "placement_bench/v1"
 KERNEL_SCHEMA = "kernel_bench/v1"
+FAILURES_SCHEMA = "failures_bench/v1"
 CALIBRATION_SCHEMA = "calibration/v1"
 BASELINE_SCHEMA = "bench_baseline/v1"
 
@@ -74,6 +80,10 @@ def _check_host(path: str, rep: Dict, errors: List[str]) -> None:
 def _validate_placement(path: str, rep: Dict, errors: List[str]) -> None:
     if not any(k in rep for k in SECTIONS):
         errors.append(f"{path}: no result section (one of {SECTIONS})")
+    _check_planner_latency(path, rep, errors)
+
+
+def _check_planner_latency(path: str, rep: Dict, errors: List[str]) -> None:
     lat = rep.get("planner_latency")
     if lat is not None:
         if not isinstance(lat, dict):
@@ -157,10 +167,57 @@ def _validate_calibration(path: str, rep: Dict, errors: List[str]) -> None:
                 errors.append(f"{path}: kernels[{i}] missing {missing}")
 
 
+#: recovery columns every ``--faults`` row must carry.
+FAULT_ROW_KEYS = (
+    "slo_attainment", "n_gpu_failures", "n_node_drains", "n_fault_evictions",
+    "n_fault_recovered", "n_recovery_pending", "recovery_seconds_max",
+    "capacity_lost_gpu_seconds", "n_requeued_requests", "n_shed_requests",
+)
+
+
+def _validate_failures(path: str, rep: Dict, errors: List[str]) -> None:
+    section = rep.get("faults")
+    if not isinstance(section, dict):
+        errors.append(f"{path}: missing faults section")
+        return
+    rows = section.get("rows")
+    if not isinstance(rows, dict) or not rows:
+        errors.append(f"{path}: faults.rows missing or empty")
+    else:
+        for key, row in rows.items():
+            if not isinstance(row, dict):
+                errors.append(f"{path}: faults.rows[{key!r}] is not an object")
+                continue
+            missing = [k for k in FAULT_ROW_KEYS if k not in row]
+            if missing:
+                errors.append(f"{path}: faults.rows[{key!r}] missing {missing}")
+    retention = section.get("retention")
+    if not isinstance(retention, dict) or not retention:
+        errors.append(f"{path}: faults.retention missing or empty")
+    else:
+        for commit, r in retention.items():
+            v = r.get("slo_retention") if isinstance(r, dict) else None
+            if not isinstance(v, (int, float)) or not math.isfinite(v) or v < 0:
+                errors.append(
+                    f"{path}: faults.retention[{commit!r}].slo_retention not "
+                    f"a finite non-negative number: {v!r}"
+                )
+    if section.get("fault_byte_identity") is not True:
+        errors.append(
+            f"{path}: fault_byte_identity is "
+            f"{section.get('fault_byte_identity')!r} — an empty injector "
+            f"perturbed the trace (determinism contract broken)"
+        )
+    if not isinstance(section.get("fault_events"), list):
+        errors.append(f"{path}: faults.fault_events missing (schedule list)")
+    _check_planner_latency(path, rep, errors)
+
+
 _VALIDATORS = {
     PLACEMENT_SCHEMA: _validate_placement,
     KERNEL_SCHEMA: _validate_kernels,
     CALIBRATION_SCHEMA: _validate_calibration,
+    FAILURES_SCHEMA: _validate_failures,
 }
 
 

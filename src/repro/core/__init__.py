@@ -20,10 +20,19 @@ Public API:
     traffic      — seeded request-arrival generators (demand axis)
     perfmodel    — per-partition service rates (prefill/decode tokens/s)
     autoscaler   — SLO-aware replica controller (offered load -> targets)
+    faults       — seeded fault injection (GPU/slice failures, drains)
 """
 from .autoscaler import SLO, Autoscaler, AutoscalerConfig  # noqa: F401
 from .engine import EngineResult, PlacementEngine, available_policies  # noqa: F401
+from .faults import FaultEvent, FaultInjector, FaultSpec  # noqa: F401
 from .perfmodel import PerfModel  # noqa: F401
 from .profiles import A100_80GB, H100_96GB, DeviceModel, Profile  # noqa: F401
-from .state import ClusterState, GPUState, Placement, Transaction, Workload  # noqa: F401
+from .state import (  # noqa: F401
+    HEALTH_STATES,
+    ClusterState,
+    GPUState,
+    Placement,
+    Transaction,
+    Workload,
+)
 from .traffic import ModelTraffic, RequestTrace, generate_requests  # noqa: F401

@@ -449,9 +449,20 @@ class PlacementEngine:
     # -- device grouping ---------------------------------------------------
     @staticmethod
     def _groups(state: ClusterState) -> Dict[str, List[str]]:
+        """Schedulable GPUs by device kind.
+
+        Unhealthy GPUs (failed / draining / maintenance / degraded — see
+        ``state.HEALTH_STATES``) are excluded here, at the single chokepoint
+        every verb routes through, so no policy — scalar, fabric-vectorized,
+        or MIP — can land new placements on a quarantined GPU, and plan
+        verbs never try to repack placements that survive on a degraded one.
+        """
         groups: Dict[str, List[str]] = {}
         for gid in state.ordered_gids():
-            groups.setdefault(state.gpus[gid].device.name, []).append(gid)
+            gpu = state.gpus[gid]
+            if not gpu.schedulable:
+                continue
+            groups.setdefault(gpu.device.name, []).append(gid)
         return groups
 
     @staticmethod

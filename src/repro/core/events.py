@@ -40,6 +40,7 @@ import numpy as np
 from ..obs import get_telemetry
 from .autoscaler import SLO, Autoscaler, ModelLoad
 from .engine import PlacementEngine
+from .faults import FAULT_KINDS, FaultEvent, FaultInjector
 from .fleetgen import FleetSpec, build_fleet  # noqa: F401  (re-exported API)
 from .migration import CommitPolicy
 from .perfmodel import PerfModel
@@ -58,6 +59,35 @@ __all__ = [
     "ModelServiceSpec",
     "DemandSimulator",
 ]
+
+#: event kinds the fault-injection path dispatches on (incidents + repairs).
+_FAULT_EVENT_KINDS = frozenset(FAULT_KINDS) | {"repair"}
+
+#: FaultEvent.kind -> GPU health mark applied on impact.
+_HEALTH_FOR = {
+    "gpu_failure": "failed",
+    "slice_failure": "degraded",
+    "node_drain": "draining",
+    "maintenance_window": "maintenance",
+}
+
+#: FaultEvent.kind -> TraceStats counter bumped on impact.
+_FAULT_COUNTERS = {
+    "gpu_failure": "n_gpu_failures",
+    "slice_failure": "n_slice_failures",
+    "node_drain": "n_node_drains",
+    "maintenance_window": "n_maintenance_windows",
+}
+
+
+@dataclasses.dataclass
+class _Incident:
+    """One fault's eviction set, tracked until recovery completes."""
+
+    t0: float
+    remaining: set
+    done_at: float = 0.0
+    recorded: bool = False
 
 #: default per-device profile pools for random arrivals (same spirit as
 #: simulator._DEFAULT_PROFILE_POOL: skip the trivially-whole-device profile).
@@ -209,6 +239,25 @@ class TraceStats:
     slo_attainment_by_model: Dict[str, float] = dataclasses.field(
         default_factory=dict
     )
+    # -- fault injection & recovery (faults= on either simulator) -----------
+    n_gpu_failures: int = 0
+    n_slice_failures: int = 0
+    n_node_drains: int = 0
+    n_maintenance_windows: int = 0
+    n_repairs: int = 0
+    n_fault_noops: int = 0  # fault/repair aimed at an already-down/up target
+    n_fault_evictions: int = 0  # replicas evicted by faults
+    n_fault_recovered: int = 0  # evicted replicas re-placed by the engine
+    n_recovery_pending: int = 0  # still waiting for capacity at horizon
+    n_ghost_departures: int = 0  # departures of already-evicted workloads
+    n_emergency_commits: int = 0  # escalated verbs committed during recovery
+    recovery_seconds_total: float = 0.0  # summed time-to-full-recovery
+    recovery_seconds_max: float = 0.0  # slowest incident's recovery time
+    capacity_lost_gpu_seconds: float = 0.0  # integral of down GPU-equivalents
+    # -- demand-layer fault damage (DemandSimulator only) --------------------
+    n_requeued_requests: int = 0  # in-flight requests requeued by evictions
+    n_shed_requests: int = 0  # best-effort arrivals shed during brownout
+    brownout_seconds: float = 0.0  # wall-clock with recovery pending
 
     @property
     def disruption_minutes(self) -> float:
@@ -230,10 +279,22 @@ class OnlineSimulator:
         compact_every: Optional[float] = None,
         migration_budget: Optional[int] = None,
         reconfigure_every: Optional[float] = None,
+        faults: Optional[FaultInjector] = None,
     ):
         self.state = state
         self.engine = engine
         self.compact_every = compact_every
+        #: seeded fault injector (None = no faults; the clean path draws no
+        #: extra RNG samples and replays byte-identically to pre-fault code).
+        self.faults = faults
+        self._recovery_queue: List[Workload] = []
+        self._fault_evicted: set = set()
+        self._incidents: List[_Incident] = []
+        #: integral bookkeeping for capacity_lost_gpu_seconds.
+        self._lost_units = 0.0  # GPU-equivalents currently down
+        self._lost_mark = 0.0  # last accrual time (clamped to horizon)
+        self._unit_frac: Dict[str, float] = {}  # gid -> its lost fraction
+        self._horizon = 0.0
         #: periodic maintenance repack (paper Sec 2.3.3) — the expensive
         #: verb the CommitPolicy exists to keep honest online.
         self.reconfigure_every = reconfigure_every
@@ -315,7 +376,15 @@ class OnlineSimulator:
         t_prev = 0.0
         tel = get_telemetry()
         last_t = 0.0  # when the fleet last changed (gauge timestamps)
-        for ev in self._events_with_compactions(trace):
+        self._horizon = trace.horizon
+        events = self._events_with_compactions(trace)
+        if self.faults is not None:
+            events = heapq.merge(
+                events,
+                self.faults.schedule(self.state, trace.horizon),
+                key=lambda e: e.time,
+            )
+        for ev in events:
             sample = self._sample()
             if tel.enabled:
                 # The pre-event sample describes the fleet since the LAST
@@ -338,8 +407,12 @@ class OnlineSimulator:
                 self._handle_departure(ev, stats)
             elif ev.kind in ("compact", "reconfigure"):
                 self._handle_plan_verb(ev.kind, stats, ev.time)
+            elif ev.kind in _FAULT_EVENT_KINDS:
+                self._handle_fault(ev, stats, ev.time)
             else:  # pragma: no cover
                 raise ValueError(f"unknown event kind {ev.kind!r}")
+        if self.faults is not None:
+            self._finalize_faults(stats, trace.horizon)
         sample = self._sample()
         if tel.enabled:
             self._record_sample_gauges(tel, trace.horizon, sample)
@@ -356,11 +429,25 @@ class OnlineSimulator:
 
     def _handle_arrival(self, ev: Event, stats: TraceStats) -> None:
         stats.n_arrived += len(ev.workloads)
-        res = self.engine.deploy(self.state, list(ev.workloads))
+        batch = list(ev.workloads)
+        if self.faults is not None and batch:
+            # A whole device kind can be down mid-incident; arrivals routed
+            # to it are rejections, not routing errors.
+            kinds = {
+                g.device.name for g in self.state.gpus.values() if g.schedulable
+            }
+            routable = [
+                w for w in batch if not w.device_kind or w.device_kind in kinds
+            ]
+            stats.n_rejected += len(batch) - len(routable)
+            batch = routable
+            if not batch:
+                return
+        res = self.engine.deploy(self.state, batch)
         stats.engine_seconds += res.seconds
         rejected = {w.wid for w in res.pending}
         stats.n_rejected += len(rejected)
-        stats.n_placed += len(ev.workloads) - len(rejected)
+        stats.n_placed += len(batch) - len(rejected)
         # Rejected replicas leave the system (no admission queue — the online
         # analogue of the paper's "pending" metric).
         for wid in rejected:
@@ -368,11 +455,21 @@ class OnlineSimulator:
 
     def _handle_departure(self, ev: Event, stats: TraceStats) -> None:
         for wid in ev.wids:
+            if wid in self._fault_evicted:
+                # Ghost departure: a fault already evicted this workload.
+                # Its lifetime ends here either way — stop trying to recover
+                # it, bump the counter, and touch no occupancy caches.
+                self._ghost_departure(wid, stats)
+                continue
             gid = self.state.gpu_of(wid)
             if gid is not None:
                 self.state.gpus[gid].remove(wid)
                 stats.n_departed += 1
+                self._fleet_changed()
             self.state.workloads.pop(wid, None)
+        if self._recovery_queue:
+            # Departures free capacity: retry pending recoveries.
+            self._recover(ev.time, stats)
 
     def _handle_plan_verb(self, verb: str, stats: TraceStats, now: float) -> None:
         if verb not in self.engine.policy.supports:
@@ -437,6 +534,232 @@ class OnlineSimulator:
                 ).inc(float(res.cost.total_bytes), t=now)
         if tel.enabled:
             self._record_fleet_gauges(tel, now)
+        if self._recovery_queue:
+            # A committed repack may have made room: retry pending recoveries.
+            self._recover(now, stats)
+
+    # -- fault injection & recovery -----------------------------------------
+    def _fleet_changed(self) -> None:
+        """Placement-mutation hook (DemandSimulator dirties its cache)."""
+
+    def _handle_fault(self, ev: FaultEvent, stats: TraceStats, now: float) -> None:
+        tel = get_telemetry()
+        gpu = self.state.gpus.get(ev.gid)
+        if gpu is None:
+            stats.n_fault_noops += 1
+            return
+        if ev.kind == "repair":
+            if gpu.health == "healthy":
+                stats.n_fault_noops += 1  # duplicate/stale repair
+                return
+            self._accrue_lost(stats, now)
+            self._lost_units -= self._unit_frac.pop(ev.gid, 0.0)
+            self.state.set_health(ev.gid, "healthy")
+            stats.n_repairs += 1
+            tel.tracer.event("repair", time=now, gid=ev.gid, spec=ev.spec)
+            self._recover(now, stats)
+            self._update_brownout(now, stats)
+            return
+        if gpu.health != "healthy":
+            # Overlapping fault on an already-down target: no-op with a
+            # counter bump (its capacity loss is already accounted).
+            stats.n_fault_noops += 1
+            return
+        self._accrue_lost(stats, now)
+        victims = list(gpu.placements)
+        frac = 1.0
+        if ev.kind == "slice_failure":
+            # Only the placement covering the dead memory position dies; the
+            # GPU is quarantined (degraded) but survivors keep serving.
+            occ = gpu.memory_occupancy()
+            idx = ev.index % gpu.device.n_memory_slices
+            dead_wid = occ[idx]
+            victims = [pl for pl in victims if pl.wid == dead_wid]
+            frac = 1.0 / gpu.device.n_memory_slices
+        self._unit_frac[ev.gid] = frac
+        self._lost_units += frac
+        self.state.set_health(ev.gid, _HEALTH_FOR[ev.kind])
+        counter = _FAULT_COUNTERS[ev.kind]
+        setattr(stats, counter, getattr(stats, counter) + 1)
+        tel.tracer.event("fault", time=now, kind=ev.kind, gid=ev.gid,
+                         n_evicted=len(victims), spec=ev.spec)
+        if tel.enabled:
+            tel.metrics.counter(
+                "failures_total", "injected fault events by kind",
+                labels={"kind": ev.kind},
+            ).inc(t=now)
+        evicted: List[Workload] = []
+        for pl in victims:
+            w = self.state.workloads.get(pl.wid)
+            self.state.remove(pl.wid, ev.gid)
+            self.state.forget_workload(pl.wid)
+            if w is not None:
+                evicted.append(w)
+        self._fleet_changed()
+        if evicted:
+            stats.n_fault_evictions += len(evicted)
+            self._fault_evicted.update(w.wid for w in evicted)
+            self._incidents.append(
+                _Incident(t0=now, remaining={w.wid for w in evicted})
+            )
+            self._on_fault_evicted(evicted, now, stats)
+            self._recovery_queue.extend(evicted)
+        self._recover(now, stats)
+        self._update_brownout(now, stats)
+
+    def _recover(self, now: float, stats: TraceStats) -> None:
+        """Re-place evicted replicas through the engine (CommitPolicy-gated
+        deploy; escalated emergency verbs if the free space cannot host them)."""
+        if not self._recovery_queue:
+            return
+        healthy_kinds = {
+            g.device.name for g in self.state.gpus.values() if g.schedulable
+        }
+        if not healthy_kinds:
+            return  # nothing to place on; retried at the next repair
+        batch = [
+            w for w in self._recovery_queue
+            if not w.device_kind or w.device_kind in healthy_kinds
+        ]
+        if not batch:
+            return
+        tel = get_telemetry()
+        with tel.tracer.span("recover") as sp:
+            res = self.engine.deploy(self.state, batch)
+            stats.engine_seconds += res.seconds
+            pending = {w.wid for w in res.pending}
+            for wid in pending:
+                self.state.workloads.pop(wid, None)  # stays queued, unregistered
+            if pending:
+                pending = self._escalate_recovery(batch, pending, now, stats)
+            placed = [w for w in batch if w.wid not in pending]
+            placed_wids = {w.wid for w in placed}
+            self._recovery_queue = [
+                w for w in self._recovery_queue if w.wid not in placed_wids
+            ]
+            self._fleet_changed()
+            ready = self._on_recovered(placed, now, stats)
+            for w in placed:
+                self._complete_recovery(w.wid, ready.get(w.wid, now), stats)
+            if tel.enabled:
+                sp.set(sim_time=now, n_placed=len(placed),
+                       n_pending=len(pending))
+        self._update_brownout(now, stats)
+
+    def _escalate_recovery(
+        self, batch: List[Workload], pending: set, now: float, stats: TraceStats
+    ) -> set:
+        """Free space can't host the evicted replicas: swap in the commit
+        policy's emergency tier, make room with compact/reconfigure, retry."""
+        esc = self.engine.commit_policy.escalate()
+        if esc is None:
+            return pending  # emergency tier disabled ("gated")
+        tel = get_telemetry()
+        saved = self.engine.commit_policy
+        self.engine.commit_policy = esc
+        try:
+            for verb in ("compact", "reconfigure"):
+                if not pending:
+                    break
+                if verb not in self.engine.policy.supports:
+                    continue
+                res = getattr(self.engine, verb)(self.state)
+                stats.engine_seconds += res.seconds
+                if not res.committed:
+                    continue
+                stats.n_emergency_commits += 1
+                tel.tracer.event("emergency_commit", time=now, verb=verb)
+                # Emergency repacks pay real disruption: account it exactly
+                # like a committed periodic plan verb.
+                for w in res.pending:
+                    self.state.workloads.pop(w.wid, None)
+                    stats.n_rejected += 1
+                stats.n_migrations += res.plan.n_migrations if res.plan else 0
+                if res.cost is not None and res.cost.n_moves:
+                    stats.bytes_moved += res.cost.total_bytes
+                    stats.disruption_seconds += res.cost.downtime_seconds
+                    stats.migration_window_seconds += res.cost.duration_seconds
+                    self._busy_until = max(
+                        self._busy_until, now + res.cost.duration_seconds
+                    )
+                self._sweep_ghosts(now, stats)
+                retry = [w for w in batch if w.wid in pending]
+                r2 = self.engine.deploy(self.state, retry)
+                stats.engine_seconds += r2.seconds
+                pending = {w.wid for w in r2.pending}
+                for wid in pending:
+                    self.state.workloads.pop(wid, None)
+        finally:
+            self.engine.commit_policy = saved
+        return pending
+
+    def _complete_recovery(self, wid: str, at: float, stats: TraceStats) -> None:
+        """Mark one evicted replica re-placed; close its incident when the
+        last one lands (recovery-time-to-full-capacity accounting)."""
+        self._fault_evicted.discard(wid)
+        stats.n_fault_recovered += 1
+        for inc in self._incidents:
+            if wid in inc.remaining:
+                inc.remaining.discard(wid)
+                inc.done_at = max(inc.done_at, at)
+                if not inc.remaining and not inc.recorded:
+                    inc.recorded = True
+                    dt = max(inc.done_at - inc.t0, 0.0)
+                    stats.recovery_seconds_total += dt
+                    stats.recovery_seconds_max = max(
+                        stats.recovery_seconds_max, dt
+                    )
+                    tel = get_telemetry()
+                    if tel.enabled:
+                        tel.metrics.histogram(
+                            "recovery_seconds",
+                            "fault to full re-placement of its evictions",
+                        ).observe(dt)
+                        tel.tracer.event("recovered", time=at, t0=inc.t0,
+                                         seconds=dt)
+                break
+
+    def _ghost_departure(self, wid: str, stats: TraceStats) -> None:
+        stats.n_ghost_departures += 1
+        self._fault_evicted.discard(wid)
+        self._recovery_queue = [
+            w for w in self._recovery_queue if w.wid != wid
+        ]
+        for inc in self._incidents:
+            # The workload's lifetime ended before recovery: it no longer
+            # holds its incident open (no recovery time is recorded for
+            # incidents fully resolved by departures).
+            inc.remaining.discard(wid)
+
+    def _on_fault_evicted(
+        self, evicted: List[Workload], now: float, stats: TraceStats
+    ) -> None:
+        """Hook: demand layer requeues the evictions' in-flight requests."""
+
+    def _on_recovered(
+        self, placed: List[Workload], now: float, stats: TraceStats
+    ) -> Dict[str, float]:
+        """Hook: demand layer re-creates replicas; returns wid -> ready-at
+        (cold-restore delay).  Base: placements serve immediately."""
+        return {}
+
+    def _sweep_ghosts(self, now: float, stats: TraceStats) -> None:
+        """Hook: demand layer drops replicas evicted by emergency verbs."""
+
+    def _update_brownout(self, now: float, stats: TraceStats) -> None:
+        """Hook: demand layer accrues brownout (recovery-pending) time."""
+
+    def _accrue_lost(self, stats: TraceStats, now: float) -> None:
+        t = min(now, self._horizon)
+        if t > self._lost_mark:
+            stats.capacity_lost_gpu_seconds += (
+                self._lost_units * (t - self._lost_mark)
+            )
+            self._lost_mark = t
+
+    def _finalize_faults(self, stats: TraceStats, horizon: float) -> None:
+        self._accrue_lost(stats, horizon)
+        stats.n_recovery_pending = len(self._fault_evicted)
 
     def _record_sample_gauges(self, tel, t: float, sample) -> None:
         """Fleet-health time series on the simulated clock, fed from the
@@ -489,6 +812,9 @@ class ModelServiceSpec:
     #: replicas deployed at t=0 (static baselines set this and no autoscaler).
     initial_replicas: int = 0
     slo: SLO = SLO()
+    #: best-effort tier: shed this model's arrivals first (brownout) while
+    #: post-failure capacity cannot host the evicted replicas.
+    best_effort: bool = False
 
 
 @dataclasses.dataclass
@@ -502,6 +828,11 @@ class _Replica:
     current: Optional[RequestArrival] = None
     busy_until: float = 0.0
     draining: bool = False  # no new requests; removed at next completion
+
+
+#: sentinel occupying ``_Replica.current`` while a fault-recovered replica
+#: cold-restores (weights transfer + resume); cleared by its "warmup" event.
+_RESTORING = object()
 
 
 class DemandSimulator(OnlineSimulator):
@@ -534,6 +865,7 @@ class DemandSimulator(OnlineSimulator):
         compact_every: Optional[float] = None,
         reconfigure_every: Optional[float] = None,
         migration_budget: Optional[int] = None,
+        faults: Optional[FaultInjector] = None,
     ):
         super().__init__(
             state,
@@ -541,7 +873,11 @@ class DemandSimulator(OnlineSimulator):
             compact_every=compact_every,
             migration_budget=migration_budget,
             reconfigure_every=reconfigure_every,
+            faults=faults,
         )
+        #: brownout engages while fault recovery is pending (see
+        #: ``_update_brownout``): best-effort models' arrivals are shed.
+        self._brownout_since: Optional[float] = None
         self.specs: Dict[str, ModelServiceSpec] = {s.model: s for s in specs}
         self.autoscaler = autoscaler
         self.perf = perf or PerfModel()
@@ -714,6 +1050,12 @@ class DemandSimulator(OnlineSimulator):
         self._arrived[req.model] += 1
         self._shapes[req.model].add(req.prompt_len, req.decode_len)
         self._win[req.model]["arrived"] += 1
+        if self._brownout_since is not None and self.specs[req.model].best_effort:
+            # Brownout: post-failure capacity can't host the evicted
+            # replicas yet — shed best-effort arrivals (they count as
+            # arrived-and-missed, so SLO attainment takes the damage).
+            stats.n_shed_requests += 1
+            return
         self._queues[req.model].append(req)
         self._dispatch(req.model, now, heap, seq)
 
@@ -853,6 +1195,8 @@ class DemandSimulator(OnlineSimulator):
                 sp.set(sim_time=now, n_scale_ups=n_ups, n_scale_downs=n_downs)
                 self._record_sample_gauges(tel, now, self._fleet_sample())
                 self._record_fleet_gauges(tel, now)
+        if self._recovery_queue:
+            self._recover(now, stats)
         for model in self._win:
             self._win[model] = self._fresh_window()
 
@@ -861,15 +1205,119 @@ class DemandSimulator(OnlineSimulator):
         requeue their in-flight request and forget the ghost."""
         super()._handle_plan_verb(verb, stats, now)
         self._fleet_dirty = True
+        self._sweep_ghosts(now, stats)
+
+    # -- fault hooks (demand layer) ------------------------------------------
+    def _fleet_changed(self) -> None:
+        self._fleet_dirty = True
+
+    def _sweep_ghosts(self, now: float, stats: TraceStats) -> None:
+        """Drop replica objects whose workload left the state (plan-verb or
+        emergency-verb evictions); requeue their in-flight request."""
         for model, reps in self._reps.items():
             requeued = False
             for wid in [w for w in reps if w not in self.state.workloads]:
                 rep = reps.pop(wid)
-                if rep.current is not None:
+                if rep.current is not None and rep.current is not _RESTORING:
                     self._queues[model].appendleft(rep.current)
+                    stats.n_requeued_requests += 1
                     requeued = True
             if requeued:
                 self._dispatch(model, now, self._heap, self._seq)
+
+    def _on_fault_evicted(
+        self, evicted: List[Workload], now: float, stats: TraceStats
+    ) -> None:
+        """A fault killed these replicas: requeue their in-flight requests at
+        the FRONT of their model's queue (they have waited longest)."""
+        for w in evicted:
+            reps = self._reps.get(w.model)
+            if reps is None:
+                continue
+            rep = reps.pop(w.wid, None)
+            if (
+                rep is not None
+                and rep.current is not None
+                and rep.current is not _RESTORING
+            ):
+                self._queues[w.model].appendleft(rep.current)
+                stats.n_requeued_requests += 1
+
+    def _recovery_ready_at(self, w: Workload, now: float) -> float:
+        """Cold-restore completion: weights stream back over the migration
+        cost model's link, then the replica resumes cold."""
+        gid = self.state.gpu_of(w.wid)
+        device = (
+            self.state.gpus[gid].device if gid is not None
+            else self._device_for(w.device_kind)
+        )
+        cm = self.engine.cost_model
+        per = cm.bytes_per_memory_slice
+        if per is None:
+            gb = getattr(device, "mem_per_slice_gb", None)
+            per = (int(gb) << 30) if gb else (10 << 30)
+        n_bytes = device.profile(w.profile_id).memory_slices * per
+        return now + cm.transfer_seconds(n_bytes) + cm.resume_seconds
+
+    def _on_recovered(
+        self, placed: List[Workload], now: float, stats: TraceStats
+    ) -> Dict[str, float]:
+        """Re-create replica objects for re-placed workloads.  Each restores
+        cold (a "warmup" event frees it); its incident closes at ready-time,
+        so recovery_seconds measures time to SERVING capacity, not placement."""
+        ready: Dict[str, float] = {}
+        for w in placed:
+            if w.model not in self._reps:
+                continue
+            gid = self.state.gpu_of(w.wid)
+            if gid is None:
+                continue
+            at = self._recovery_ready_at(w, now)
+            ready[w.wid] = at
+            rep = _Replica(
+                wid=w.wid,
+                model=w.model,
+                profile_id=w.profile_id,
+                device=self.state.gpus[gid].device,
+            )
+            if at > now:
+                rep.current = _RESTORING  # type: ignore[assignment]
+                rep.busy_until = at
+                heapq.heappush(
+                    self._heap, (at, next(self._seq), "warmup", (w.wid, w.model))
+                )
+            self._reps[w.model][w.wid] = rep
+        return ready
+
+    def _handle_warmup(self, payload, now: float, stats: TraceStats,
+                       heap, seq) -> None:
+        wid, model = payload
+        rep = self._reps[model].get(wid)
+        if rep is None or rep.current is not _RESTORING:
+            return  # evicted again (or retired) while restoring
+        rep.current = None
+        if rep.draining:
+            self._remove_replica(rep)
+        else:
+            self._dispatch(model, now, heap, seq)
+
+    def _update_brownout(self, now: float, stats: TraceStats) -> None:
+        active = bool(self._fault_evicted)
+        if active and self._brownout_since is None:
+            self._brownout_since = now
+        elif not active and self._brownout_since is not None:
+            t0 = min(self._brownout_since, self._horizon)
+            t1 = min(now, self._horizon)
+            stats.brownout_seconds += max(t1 - t0, 0.0)
+            self._brownout_since = None
+
+    def _finalize_faults(self, stats: TraceStats, horizon: float) -> None:
+        super()._finalize_faults(stats, horizon)
+        if self._brownout_since is not None:
+            stats.brownout_seconds += max(
+                horizon - min(self._brownout_since, horizon), 0.0
+            )
+            self._brownout_since = None
 
     # -- main loop ----------------------------------------------------------
     def run(self, traffic: RequestTrace) -> TraceStats:  # type: ignore[override]
@@ -892,6 +1340,10 @@ class DemandSimulator(OnlineSimulator):
         ]
         heapq.heapify(heap)
         self._heap = heap  # plan-verb eviction hook re-dispatches through it
+        self._horizon = horizon
+        if self.faults is not None:
+            for fe in self.faults.schedule(self.state, horizon):
+                heapq.heappush(heap, (fe.time, next(seq), "fault", fe))
         periods = {"compact": self.compact_every,
                    "reconfigure": self.reconfigure_every}
         for kind, period in periods.items():
@@ -935,8 +1387,14 @@ class DemandSimulator(OnlineSimulator):
                     nxt = t + periods[kind]
                     if nxt < horizon:
                         heapq.heappush(heap, (nxt, next(seq), kind, None))
+            elif kind == "fault":
+                self._handle_fault(payload, stats, t)
+            elif kind == "warmup":
+                self._handle_warmup(payload, t, stats, heap, seq)
             else:  # pragma: no cover
                 raise ValueError(f"unknown demand event kind {kind!r}")
+        if self.faults is not None:
+            self._finalize_faults(stats, horizon)
         sample = self._fleet_sample() + (self._total_queue_depth(),)
         acc += np.array(sample) * max(horizon - t_prev, 0.0)
         stats.peak_gpus_used = max(stats.peak_gpus_used, sample[0])

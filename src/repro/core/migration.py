@@ -385,6 +385,12 @@ class CommitPolicy:
     downtime_budget_seconds: Optional[float] = 120.0
     bytes_budget: Optional[int] = None
     move_budget: Optional[int] = None
+    #: escalation tier for fault recovery: ``"bypass"`` (default) lets
+    #: emergency verbs — re-placing replicas evicted by a failure — run with
+    #: gating and budgets lifted (capacity restoration beats disruption
+    #: accounting when replicas are DOWN); ``"gated"`` keeps the normal
+    #: decision rule even under incident pressure.
+    emergency: str = "bypass"
 
     def __post_init__(self) -> None:
         mode = self.mode.replace("_", "-")
@@ -393,6 +399,30 @@ class CommitPolicy:
                 f"commit mode must be one of {COMMIT_MODES}, got {self.mode!r}"
             )
         object.__setattr__(self, "mode", mode)
+        if self.emergency not in ("bypass", "gated"):
+            raise ValueError(
+                f"emergency tier must be 'bypass' or 'gated', "
+                f"got {self.emergency!r}"
+            )
+
+    def escalate(self) -> Optional["CommitPolicy"]:
+        """The emergency tier of this policy, or None if escalation is off.
+
+        Escalation is what the recovery path swaps in around its verbs when
+        evicted replicas cannot be re-placed in the free space: an
+        always-commit variant with every budget lifted, so a net-negative
+        compaction/reconfiguration that MAKES ROOM still commits.  The
+        caller restores the normal policy afterwards.
+        """
+        if self.emergency != "bypass":
+            return None
+        return dataclasses.replace(
+            self,
+            mode="always",
+            downtime_budget_seconds=None,
+            bytes_budget=None,
+            move_budget=None,
+        )
 
     def decide(self, gains: PlanGains, cost: PlanCost) -> CommitDecision:
         if cost.n_moves == 0:

@@ -35,6 +35,7 @@ __all__ = [
     "GPUState",
     "ClusterState",
     "Transaction",
+    "HEALTH_STATES",
 ]
 
 
@@ -70,6 +71,14 @@ class Placement:
         return device.profile(self.profile_id).span(self.index, device.n_gpu_slices)
 
 
+#: GPU health marks (fault injection / recovery control plane).  Anything
+#: but "healthy" quarantines the GPU: the placement engine excludes it from
+#: every device group, so no policy — scalar, fabric, or MIP — can land new
+#: placements on it.  "degraded" (a failed memory slice) keeps surviving
+#: placements serving; the other marks mean the GPU was evicted.
+HEALTH_STATES = ("healthy", "failed", "draining", "maintenance", "degraded")
+
+
 @dataclasses.dataclass
 class GPUState:
     """One GPU (bin) with its current placements."""
@@ -77,6 +86,7 @@ class GPUState:
     gid: str
     device: DeviceModel = A100_80GB
     placements: List[Placement] = dataclasses.field(default_factory=list)
+    health: str = "healthy"
 
     def __post_init__(self) -> None:
         self._occ: List[Optional[str]] = []
@@ -140,9 +150,16 @@ class GPUState:
     def is_empty(self) -> bool:
         return not self.placements
 
+    @property
+    def schedulable(self) -> bool:
+        """Eligible for NEW placements (existing ones may keep serving)."""
+        return self.health == "healthy"
+
     # ---- feasibility -----------------------------------------------------
     def can_place_at(self, profile: Profile, index: int) -> bool:
         """Is placing ``profile`` at ``index`` feasible in the current state?"""
+        if self.health != "healthy":
+            return False  # quarantined: failed / draining / maintenance
         if index not in profile.allowed_indexes:
             return False
         stop = index + profile.memory_slices
@@ -275,7 +292,7 @@ class GPUState:
         )
 
     def clone(self) -> "GPUState":
-        return GPUState(self.gid, self.device, list(self.placements))
+        return GPUState(self.gid, self.device, list(self.placements), self.health)
 
 
 # ---------------------------------------------------------------------------
@@ -323,6 +340,9 @@ class Transaction:
                     st.workloads.pop(wid, None)
                 else:
                     st.workloads[wid] = prev
+            elif kind == "health":
+                _, gid, prev = op
+                st.gpus[gid].health = prev
             else:  # pragma: no cover - journal is internal
                 raise AssertionError(f"unknown journal op {kind}")
         self._ops.clear()
@@ -447,6 +467,26 @@ class ClusterState:
     def add_workload(self, w: Workload) -> None:
         self._journal(("add_wl", w.wid, self.workloads.get(w.wid)))
         self.workloads[w.wid] = w
+
+    def forget_workload(self, wid: str) -> Optional[Workload]:
+        """Journaled deregistration (fault eviction: the replica leaves the
+        system, but a transaction rollback restores it byte-identically)."""
+        prev = self.workloads.pop(wid, None)
+        if prev is not None:
+            self._journal(("add_wl", wid, prev))
+        return prev
+
+    def set_health(self, gid: str, health: str) -> None:
+        """Journaled GPU health mark (see ``HEALTH_STATES``)."""
+        if health not in HEALTH_STATES:
+            raise ValueError(
+                f"health must be one of {HEALTH_STATES}, got {health!r}"
+            )
+        gpu = self.gpus[gid]
+        if gpu.health == health:
+            return
+        self._journal(("health", gid, gpu.health))
+        gpu.health = health
 
     def place(
         self, wid: str, gid: str, index: int, profile_id: Optional[int] = None

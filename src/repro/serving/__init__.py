@@ -4,6 +4,7 @@
     engine  — JetStream-style slot engine (prefill / insert / ragged decode)
     cluster — ClusterServer: the paper's placement engine as the scheduler
 """
+from .cluster import NoReplicaError, PlanExecutionError, StepPolicy  # noqa: F401
 from .engine import Completion, Engine, EngineConfig, Request  # noqa: F401
 from .kvcache import BlockAllocator, PagedKVCache, insert_prefix  # noqa: F401
 
@@ -15,4 +16,7 @@ __all__ = [
     "BlockAllocator",
     "PagedKVCache",
     "insert_prefix",
+    "NoReplicaError",
+    "PlanExecutionError",
+    "StepPolicy",
 ]

@@ -64,7 +64,46 @@ __all__ = [
     "ExecutionReport",
     "MigrationStep",
     "AutoscaleReport",
+    "NoReplicaError",
+    "StepPolicy",
+    "PlanExecutionError",
 ]
+
+
+# ---------------------------------------------------------------------------
+# faults & execution hardening
+# ---------------------------------------------------------------------------
+class NoReplicaError(LookupError):
+    """``route()`` found no live replica of the model (all failed/retired).
+
+    Callers that cannot wait should catch this; ``submit()`` catches it
+    itself and parks the request in the model's backlog until a replica
+    comes back (redeploy, repair, or recovery)."""
+
+    def __init__(self, model: str):
+        super().__init__(f"no live replicas of {model!r}")
+        self.model = model
+
+
+@dataclasses.dataclass(frozen=True)
+class StepPolicy:
+    """Retry/timeout envelope for one plan-execution step.
+
+    Steps are synchronous, so ``timeout_seconds`` cannot preempt a stuck
+    step — it measures the elapsed wall time after the step returns and
+    treats an overrun as a failure (the runtime equivalent gave up on the
+    worker and must redo the step elsewhere).  Failures back off
+    exponentially from ``backoff_seconds`` up to ``backoff_cap_seconds``.
+    """
+
+    timeout_seconds: float = 30.0
+    max_attempts: int = 3
+    backoff_seconds: float = 0.05
+    backoff_cap_seconds: float = 2.0
+
+    def __post_init__(self) -> None:
+        if self.max_attempts < 1 or self.timeout_seconds <= 0:
+            raise ValueError(f"invalid step policy: {self}")
 
 
 # ---------------------------------------------------------------------------
@@ -131,6 +170,31 @@ class ExecutionReport:
     handoffs: List[str]  # replicas whose live KV cache moved with them
     bytes_moved: int = 0
     downtime_seconds: float = 0.0
+    #: step-machine outcome: did every step land (after retries)?
+    completed: bool = True
+    failed_step: str = ""  # "" when completed
+    n_retries: int = 0  # step attempts beyond the first, summed
+    rolled_back: bool = False  # failure undone: state byte-identical to pre-verb
+    resumable: bool = False  # failure journaled: ``resume_execution()`` continues
+
+
+class PlanExecutionError(RuntimeError):
+    """A plan step kept failing after its retry budget.
+
+    Carries the execution ``journal`` (keys of every step that DID land,
+    in order) and the partial ``report`` so the caller can roll back or
+    resume idempotently from the first unfinished step."""
+
+    def __init__(self, step: str, attempts: int, cause: BaseException,
+                 journal: List[Tuple[str, str, int]], report: "ExecutionReport"):
+        super().__init__(
+            f"plan step {step!r} failed after {attempts} attempts: {cause}"
+        )
+        self.step = step
+        self.attempts = attempts
+        self.cause = cause
+        self.journal = journal
+        self.report = report
 
 
 @dataclasses.dataclass
@@ -198,7 +262,14 @@ class ClusterServer:
         perf: Optional[PerfModel] = None,
         engine_factory: Optional[Callable[[str, str, str], Any]] = None,
         autoscale_window: float = 30.0,
+        step_policy: Optional[StepPolicy] = None,
+        on_execution_failure: str = "rollback",
     ):
+        if on_execution_failure not in ("rollback", "resume"):
+            raise ValueError(
+                "on_execution_failure must be 'rollback' or 'resume', "
+                f"got {on_execution_failure!r}"
+            )
         self.device = device
         # plan_deploys=True gives DeployReport a scored plan; turn it off on
         # fleet-scale servers where the per-deploy clone + diff walk would
@@ -240,6 +311,26 @@ class ClusterServer:
         )
         #: model -> running request shape for capacity estimation.
         self._req_shapes: Dict[str, RequestShape] = {}
+        # -- fault tolerance -------------------------------------------------
+        self.step_policy = step_policy or StepPolicy()
+        #: "rollback": a failed plan execution undoes the verb entirely;
+        #: "resume": keep the committed layout + journal and let
+        #: ``resume_execution()`` finish the remaining steps.
+        self.on_execution_failure = on_execution_failure
+        #: step kind -> remaining injected failures (tests / chaos drills).
+        self._failpoints: Dict[str, int] = {}
+        self._sleep: Callable[[float], None] = time.sleep
+        #: (plan, journal) of a partially-executed plan awaiting resume.
+        self._pending_plan: Optional[
+            Tuple[MigrationPlan, List[Tuple[str, str, int]]]
+        ] = None
+        #: model -> requests parked by submit() while no replica was live.
+        self._backlog: Dict[str, Deque[Any]] = collections.defaultdict(
+            collections.deque
+        )
+        #: fault-evicted wids: a late departure/retire for one is a no-op.
+        self._fault_evicted: set = set()
+        self.n_ghost_departures = 0
 
     # -- migration pricing: live bytes per replica --------------------------
     def _replica_bytes(self, wid: str) -> Optional[int]:
@@ -294,6 +385,8 @@ class ClusterServer:
         for w in pending:
             del self.replicas[w.wid]
             self._footprints.pop(w.wid, None)
+        if self._backlog.get(model):
+            self._flush_backlog(model)
         return DeployReport(
             placed=[w.wid for w in news if w not in pending],
             pending=[w.wid for w in pending],
@@ -343,89 +436,222 @@ class ClusterServer:
         return self._gated_verb("reconfigure")
 
     def _gated_verb(self, verb: str) -> PlacementReport:
-        """Engine plan/score/commit, then stepwise execution of the plan."""
-        res = getattr(self.engine, verb)(self.state)
-        # res.baseline is the engine's own pre-verb snapshot — reuse it for
-        # the before/after metrics rather than cloning the fleet twice.
-        before_state = res.baseline
-        execution = (
-            self._execute_plan(res.plan)
-            if res.committed and res.plan is not None
-            else None
-        )
-        # A committed baseline-replay reconfigure may fail to re-place some
-        # replicas (its adopt removed them): retire them everywhere so no
-        # ghost replica lingers in routing/engines/footprints.
+        """Engine plan/score/commit, then stepwise execution of the plan.
+
+        The whole verb runs inside an outer state transaction: the engine's
+        own commit splices into it, so when plan *execution* dies mid-step
+        with ``on_execution_failure="rollback"`` the fleet is restored
+        byte-identical to its pre-verb layout (the committed-but-unexecuted
+        placements are undone).  With ``"resume"`` the committed layout and
+        the execution journal survive; ``resume_execution()`` continues from
+        the first unfinished step.
+        """
+        committed = False
+        execution: Optional[ExecutionReport] = None
+        with self.state.transaction() as txn:
+            res = getattr(self.engine, verb)(self.state)
+            # res.baseline is the engine's own pre-verb snapshot — reuse it
+            # for the before/after metrics rather than cloning the fleet
+            # twice.
+            before_state = res.baseline
+            committed = res.committed
+            if res.committed and res.plan is not None:
+                try:
+                    execution = self._execute_plan(res.plan)
+                except PlanExecutionError as e:
+                    execution = e.report
+                    if self.on_execution_failure == "resume":
+                        self._pending_plan = (res.plan, list(e.journal))
+                        execution.resumable = True
+                    else:
+                        txn.rollback()
+                        execution.rolled_back = True
+                        committed = False
         evicted = []
-        for w in res.pending:
-            if w.wid in self.replicas:
-                evicted.append(w.wid)
-            self.state.workloads.pop(w.wid, None)
-            self.replicas.pop(w.wid, None)
-            self.engines.pop(w.wid, None)
-            self._footprints.pop(w.wid, None)
+        if committed:
+            # A committed baseline-replay reconfigure may fail to re-place
+            # some replicas (its adopt removed them): retire them everywhere
+            # so no ghost replica lingers in routing/engines/footprints.
+            for w in res.pending:
+                if w.wid in self._fault_evicted:
+                    self.n_ghost_departures += 1
+                    self._fault_evicted.discard(w.wid)
+                    continue
+                if w.wid in self.replicas:
+                    evicted.append(w.wid)
+                self.state.workloads.pop(w.wid, None)
+                self.replicas.pop(w.wid, None)
+                self.engines.pop(w.wid, None)
+                self._footprints.pop(w.wid, None)
         return PlacementReport(
             before=evaluate(before_state),
             after=evaluate(self.state, before_state),
             plan=res.plan,
             cost=res.cost,
-            committed=res.committed,
+            committed=committed,
             execution=execution,
             evicted=evicted,
         )
 
     # ------------------------------------------------------- plan execution
-    def _execute_plan(self, plan: MigrationPlan) -> ExecutionReport:
-        """Execute a committed plan stepwise: drain -> move -> resume.
+    def inject_step_failure(self, kind: str, times: int = 1) -> None:
+        """Arm a failpoint: the next ``times`` attempts of any step of
+        ``kind`` ("drain" / "copy" / "cutover" / "resume") raise.  Chaos
+        drills and tests use this to exercise retry / rollback / resume."""
+        if times < 1:
+            raise ValueError(f"times must be >= 1, got {times}")
+        self._failpoints[kind] = self._failpoints.get(kind, 0) + times
+
+    def _maybe_failpoint(self, kind: str) -> None:
+        n = self._failpoints.get(kind, 0)
+        if n > 0:
+            if n == 1:
+                del self._failpoints[kind]
+            else:
+                self._failpoints[kind] = n - 1
+            raise RuntimeError(f"injected failure at step {kind!r}")
+
+    def _plan_steps(
+        self, plan: MigrationPlan
+    ) -> List[Tuple[str, List[Tuple[str, str, int, bool]]]]:
+        """Expand a plan into phases of (kind, wid, wave, kv_handoff) steps.
+
+        Order matches the runtime transition: disruptive moves drain their
+        replica first, wave moves copy + cut over, drained replicas copy
+        weights and resume last, cold.  Step keys ``(kind, wid, wave)`` are
+        stable across calls — the execution journal is keyed on them so a
+        resumed execution skips exactly the steps that already landed.
+        """
+        phases: List[Tuple[str, List[Tuple[str, str, int, bool]]]] = []
+        phases.append(
+            ("drain", [("drain", mv.wid, -1, False) for mv in plan.disruptive])
+        )
+        for i, wave in enumerate(plan.waves):
+            steps: List[Tuple[str, str, int, bool]] = []
+            for mv in wave:
+                if mv.src_gid is None:
+                    continue  # fresh deployment: nothing to copy
+                handoff = mv.wid in self.engines
+                steps.append(("copy", mv.wid, i, handoff))
+                steps.append(("cutover", mv.wid, i, False))
+            phases.append((f"copy_wave:{i}", steps))
+        resume: List[Tuple[str, str, int, bool]] = []
+        for mv in plan.disruptive:
+            # drained replicas still transfer their weights (KV went cold
+            # with the drain, so no handoff) before the cold resume.
+            resume.append(("copy", mv.wid, -1, False))
+            resume.append(("resume", mv.wid, -1, False))
+        phases.append(("resume", resume))
+        return phases
+
+    def _perform_step(self, step: Tuple[str, str, int, bool]) -> None:
+        """One step's side effects.  Steps are idempotent: a drain pumps an
+        already-dry engine zero times, copy/cutover/resume re-assert
+        bookkeeping — a retry or resume may safely redo a step whose first
+        attempt died after the work landed."""
+        kind, wid, _, _ = step
+        if kind == "drain":
+            eng = self.engines.get(wid)
+            while eng is not None and getattr(eng, "has_work", False):
+                eng.step()  # finish in-flight requests before teardown
+
+    def _run_step(self, step: Tuple[str, str, int, bool], tel) -> int:
+        """Run one step under the ``StepPolicy`` envelope; returns the
+        number of retries spent.  Raises the last failure once the attempt
+        budget is exhausted."""
+        pol = self.step_policy
+        kind = step[0]
+        delay = pol.backoff_seconds
+        last: Optional[BaseException] = None
+        for attempt in range(1, pol.max_attempts + 1):
+            t0 = time.monotonic()
+            try:
+                self._maybe_failpoint(kind)
+                self._perform_step(step)
+                if time.monotonic() - t0 > pol.timeout_seconds:
+                    # Synchronous steps can't be preempted: an overrun is
+                    # detected after the fact and treated as a failure (the
+                    # runtime gave up on this worker).
+                    raise TimeoutError(
+                        f"step {kind!r} overran {pol.timeout_seconds}s"
+                    )
+                return attempt - 1
+            except Exception as e:  # noqa: BLE001 - every failure retries
+                last = e
+                if tel.enabled:
+                    tel.metrics.counter(
+                        "plan_step_retries_total",
+                        "plan-execution step attempts that failed",
+                        labels={"kind": kind},
+                    ).inc()
+                if attempt < pol.max_attempts:
+                    self._sleep(min(delay, pol.backoff_cap_seconds))
+                    delay *= 2.0
+        assert last is not None
+        raise last
+
+    def _execute_plan(
+        self,
+        plan: MigrationPlan,
+        completed: Optional[List[Tuple[str, str, int]]] = None,
+    ) -> ExecutionReport:
+        """Execute a committed plan as a journaled step machine.
 
         The cluster state already holds the final layout (the engine
         committed it); this walks the *runtime* transition.  Disruptive
         moves drain their replica first (in-flight work on an attached
         engine is pumped to completion — no tokens are lost, but the
-        replica's slots go cold).  Wave moves copy state in parallel and
-        finish with a cutover; an attached engine object stays bound to its
-        wid through the move — the live decode cache rides along (KV
-        handoff).  Drained replicas resume last, cold.
+        replica's slots go cold).  Wave moves copy state with a cutover; an
+        attached engine object stays bound to its wid through the move —
+        the live decode cache rides along (KV handoff).  Drained replicas
+        resume last, cold.
+
+        Every step runs under the server's ``StepPolicy`` (timeout +
+        bounded exponential-backoff retry) and its key is journaled when it
+        lands.  ``completed`` (from a prior attempt's journal) skips steps
+        that already executed, making resume idempotent.  A step that
+        exhausts its budget raises ``PlanExecutionError`` carrying the
+        journal and the partial report.
         """
         tel = get_telemetry()
+        done = set(completed or ())
+        journal: List[Tuple[str, str, int]] = list(completed or ())
         steps: List[MigrationStep] = []
         drained: List[str] = []
         handoffs: List[str] = []
+        n_retries = 0
+        failure: Optional[Tuple[str, BaseException]] = None
         with tel.tracer.span("execute_plan") as sp:
-            with tel.tracer.span("drain") as dsp:
-                for mv in plan.disruptive:
-                    eng = self.engines.get(mv.wid)
-                    if eng is not None:
-                        while getattr(eng, "has_work", False):
-                            eng.step()  # finish in-flight requests before teardown
-                    steps.append(MigrationStep("drain", mv.wid))
-                    drained.append(mv.wid)
-                if tel.enabled:
-                    dsp.set(n_drained=len(drained))
-            for i, wave in enumerate(plan.waves):
-                with tel.tracer.span("copy_wave") as wsp:
-                    n_copied = 0
-                    for mv in wave:
-                        if mv.src_gid is None:
-                            continue  # fresh deployment: nothing to copy
-                        handoff = mv.wid in self.engines
+            for label, phase_steps in self._plan_steps(plan):
+                # span names stay "drain" / "copy_wave" / "resume"
+                with tel.tracer.span(label.split(":")[0]) as psp:
+                    n_landed = 0
+                    for st in phase_steps:
+                        kind, wid, wave, handoff = st
+                        key = (kind, wid, wave)
+                        if key in done:
+                            continue  # landed in a previous attempt
+                        try:
+                            n_retries += self._run_step(st, tel)
+                        except Exception as e:  # noqa: BLE001
+                            failure = (kind, e)
+                            break
+                        done.add(key)
+                        journal.append(key)
                         steps.append(
-                            MigrationStep("copy", mv.wid, wave=i, kv_handoff=handoff)
+                            MigrationStep(kind, wid, wave=wave, kv_handoff=handoff)
                         )
-                        steps.append(MigrationStep("cutover", mv.wid, wave=i))
-                        n_copied += 1
+                        if kind == "drain":
+                            drained.append(wid)
                         if handoff:
-                            handoffs.append(mv.wid)
+                            handoffs.append(wid)
+                        n_landed += 1
                     if tel.enabled:
-                        wsp.set(wave=i, n_moves=n_copied)
-            with tel.tracer.span("resume") as rsp:
-                for mv in plan.disruptive:
-                    # drained replicas still transfer their weights (KV went
-                    # cold with the drain, so no handoff) before the cold resume.
-                    steps.append(MigrationStep("copy", mv.wid))
-                    steps.append(MigrationStep("resume", mv.wid))
-                if tel.enabled:
-                    rsp.set(n_resumed=len(plan.disruptive))
+                        psp.set(n_steps=n_landed)
+                        if label.startswith("copy_wave"):
+                            psp.set(wave=int(label.split(":")[1]))
+                if failure is not None:
+                    break
             # The engine already priced this exact plan (same state, same
             # bytes_for) when it scored the commit; fresh deployments priced at
             # zero there, so the totals are the executed moves' totals.
@@ -439,17 +665,159 @@ class ClusterServer:
             if tel.enabled:
                 sp.set(n_steps=len(steps), n_waves=len(plan.waves),
                        n_drained=len(drained), n_handoffs=len(handoffs),
+                       n_retries=n_retries, completed=failure is None,
                        bytes_moved=bytes_moved, downtime_seconds=downtime)
                 tel.metrics.counter(
                     "kv_handoffs_total", "replicas whose live KV moved with them",
                 ).inc(float(len(handoffs)))
-        return ExecutionReport(
+        report = ExecutionReport(
             steps=steps,
             drained=drained,
             handoffs=handoffs,
             bytes_moved=bytes_moved,
             downtime_seconds=downtime,
+            completed=failure is None,
+            failed_step=failure[0] if failure else "",
+            n_retries=n_retries,
         )
+        if failure is not None:
+            raise PlanExecutionError(
+                step=failure[0],
+                attempts=self.step_policy.max_attempts,
+                cause=failure[1],
+                journal=journal,
+                report=report,
+            )
+        return report
+
+    def resume_execution(self) -> Optional[ExecutionReport]:
+        """Finish a plan whose execution died mid-step (``"resume"`` mode).
+
+        Re-runs the pending plan, skipping every journaled step; returns
+        the new report, or None when nothing is pending.  If execution
+        fails again the (extended) journal is kept for the next attempt.
+        """
+        if self._pending_plan is None:
+            return None
+        plan, journal = self._pending_plan
+        try:
+            report = self._execute_plan(plan, completed=journal)
+        except PlanExecutionError as e:
+            self._pending_plan = (plan, list(e.journal))
+            e.report.resumable = True
+            raise
+        self._pending_plan = None
+        return report
+
+    # ------------------------------------------------------- fault handling
+    def fail_node(self, gid: str) -> Dict[str, Any]:
+        """A node died: quarantine it, evict its replicas, and re-place
+        them through the engine.
+
+        Queued requests on evicted replicas' engines move to their model's
+        backlog (requeued, not lost).  If the plain re-deploy cannot fit
+        every evicted replica, the commit policy's emergency tier kicks in:
+        budgets are lifted and a compact/reconfigure repacks the surviving
+        fleet to make room.  Replicas that still don't fit are retired
+        (capacity is really gone); their requests stay backlogged for
+        ``repair_node`` / a later ``deploy``.
+        """
+        gpu = self.state.gpus[gid]
+        tel = get_telemetry()
+        with tel.tracer.span("fail_node") as sp:
+            self.state.set_health(gid, "failed")
+            victims = [pl.wid for pl in gpu.placements]
+            evicted: List[Workload] = []
+            models: List[str] = []
+            for wid in victims:
+                w = self.state.workloads.get(wid)
+                eng = self.engines.pop(wid, None)
+                if eng is not None and wid in self.replicas:
+                    model = self.replicas[wid][0]
+                    for req in list(getattr(eng, "queue", ())):
+                        self._backlog[model].append(req)
+                self.state.remove(wid, gid)
+                if w is not None and wid in self.replicas:
+                    self.state.forget_workload(wid)
+                    evicted.append(w)
+                    models.append(self.replicas[wid][0])
+            if tel.enabled:
+                tel.metrics.counter(
+                    "failures_total", "injected/declared node failures",
+                    labels={"kind": "gpu_failure"},
+                ).inc()
+            tel.tracer.event(
+                "fault", time=time.time(), kind="gpu_failure", gid=gid,
+                n_evicted=len(evicted),
+            )
+            recovered, lost, emergency = self._replace_evicted(evicted)
+            for model in dict.fromkeys(models):
+                self._flush_backlog(model)
+            if tel.enabled:
+                sp.set(gid=gid, n_evicted=len(evicted),
+                       n_recovered=len(recovered), n_lost=len(lost),
+                       emergency=emergency)
+        return {
+            "gid": gid,
+            "evicted": [w.wid for w in evicted],
+            "recovered": recovered,
+            "lost": lost,
+            "emergency": emergency,
+        }
+
+    def _replace_evicted(
+        self, evicted: List[Workload]
+    ) -> Tuple[List[str], List[str], bool]:
+        """Re-place fault-evicted replicas; escalate if they don't fit."""
+        if not evicted:
+            return [], [], False
+        res = self.engine.deploy(self.state, list(evicted))
+        pending = {w.wid for w in res.pending}
+        emergency = False
+        if pending and self.engine.commit_policy.escalate() is not None:
+            saved = self.engine.commit_policy
+            self.engine.commit_policy = saved.escalate()
+            try:
+                for verb in ("compact", "reconfigure"):
+                    if verb not in self.engine.policy.supports:
+                        continue
+                    report = self._gated_verb(verb)
+                    if report.committed:
+                        emergency = True
+                        tel = get_telemetry()
+                        tel.tracer.event(
+                            "emergency_commit", time=time.time(), verb=verb
+                        )
+                    retry = [
+                        self.state.workloads[wid] for wid in sorted(pending)
+                        if wid in self.state.workloads
+                    ]
+                    if not retry:
+                        break
+                    res = self.engine.deploy(self.state, retry)
+                    pending = {w.wid for w in res.pending}
+                    if not pending:
+                        break
+            finally:
+                self.engine.commit_policy = saved
+        lost = sorted(pending)
+        for wid in lost:  # capacity is really gone: retire everywhere
+            self.state.workloads.pop(wid, None)
+            self.replicas.pop(wid, None)
+            self.engines.pop(wid, None)
+            self._footprints.pop(wid, None)
+            self._fault_evicted.add(wid)
+        recovered = [w.wid for w in evicted if w.wid not in pending]
+        return recovered, lost, emergency
+
+    def repair_node(self, gid: str) -> None:
+        """Return a quarantined node to service and drain any backlog."""
+        self.state.set_health(gid, "healthy")
+        tel = get_telemetry()
+        tel.tracer.event("repair", time=time.time(), gid=gid)
+        for model in list(self._backlog):
+            if self._backlog[model]:
+                self._flush_backlog(model)
 
     # ---------------------------------------------------------------- serving
     def replicas_of(self, model: str) -> List[str]:
@@ -459,10 +827,13 @@ class ClusterServer:
         ]
 
     def route(self, model: str) -> str:
-        """Round-robin replica choice for an incoming request."""
+        """Round-robin replica choice for an incoming request.
+
+        Raises ``NoReplicaError`` when no replica of ``model`` is placed
+        (all failed, evicted, or retired)."""
         reps = sorted(self.replicas_of(model))
         if not reps:
-            raise LookupError(f"no live replicas of {model}")
+            raise NoReplicaError(model)
         i = self._rr.get(model, 0) % len(reps)
         self._rr[model] = i + 1
         return reps[i]
@@ -470,12 +841,15 @@ class ClusterServer:
     def attach_engine(self, wid: str, engine) -> None:
         self.engines[wid] = engine
 
-    def submit(self, model: str, request, now: Optional[float] = None) -> str:
+    def submit(self, model: str, request, now: Optional[float] = None) -> Optional[str]:
         """Route a request to a replica's engine; returns the replica wid.
 
         Every submit is logged into the model's offered-load window so
         ``autoscale()`` can derive arrival rates; pass ``now`` to drive a
-        simulated clock (defaults to wall time)."""
+        simulated clock (defaults to wall time).  When no replica is live
+        (mid-outage) the request is parked in the model's backlog and
+        ``None`` is returned; the backlog drains on the next successful
+        ``deploy`` / ``repair_node`` of the model."""
         ts = time.time() if now is None else now
         times = self._req_times[model]
         times.append(ts)
@@ -486,10 +860,39 @@ class ClusterServer:
             len(getattr(request, "prompt", ())),
             int(getattr(request, "max_new_tokens", 0)),
         )
-        wid = self.route(model)
+        try:
+            wid = self.route(model)
+        except NoReplicaError:
+            self._backlog[model].append(request)
+            tel = get_telemetry()
+            if tel.enabled:
+                tel.metrics.counter(
+                    "backlogged_requests_total",
+                    "requests parked while a model had no live replica",
+                    labels={"model": model},
+                ).inc()
+            return None
         if wid in self.engines:
             self.engines[wid].submit(request)
         return wid
+
+    def _flush_backlog(self, model: str) -> int:
+        """Re-route parked requests once ``model`` has live replicas again.
+
+        The requests were already logged into the offered-load window at
+        their original ``submit()``, so flushing routes them directly."""
+        q = self._backlog.get(model)
+        n = 0
+        while q:
+            try:
+                wid = self.route(model)
+            except NoReplicaError:
+                break
+            req = q.popleft()
+            if wid in self.engines:
+                self.engines[wid].submit(req)
+            n += 1
+        return n
 
     # -------------------------------------------------------------- autoscale
     def _offered_rps(self, model: str, now: float) -> float:

@@ -1,0 +1,566 @@
+"""Fault injection & recovery control plane (core/faults.py + plumbing)."""
+import dataclasses
+
+import pytest
+
+from repro.core.autoscaler import SLO
+from repro.core.engine import PlacementEngine
+from repro.core.events import (
+    DemandSimulator,
+    Event,
+    ModelServiceSpec,
+    OnlineSimulator,
+    Trace,
+)
+from repro.core.faults import FaultInjector, FaultSpec
+from repro.core.fleetgen import build_fleet
+from repro.core.migration import CommitPolicy, MigrationPlan, Move
+from repro.core.profiles import A100_80GB
+from repro.core.state import ClusterState, Workload
+from repro.core.traffic import ConstantRate, ModelTraffic, generate_requests
+from repro.serving.cluster import (
+    ClusterServer,
+    NoReplicaError,
+    PlanExecutionError,
+    StepPolicy,
+)
+
+
+def snap(state):
+    """Byte-identity fingerprint of a cluster state."""
+    return (
+        {gid: (tuple(g.placements), g.health) for gid, g in state.gpus.items()},
+        dict(state.workloads),
+    )
+
+
+def stats_dict(stats):
+    """Stats as a dict, minus wall-clock fields (never deterministic)."""
+    d = dataclasses.asdict(stats)
+    d.pop("engine_seconds")
+    return d
+
+
+# ---------------------------------------------------------------------------
+# the injector
+# ---------------------------------------------------------------------------
+class TestFaultInjector:
+    def _fleet(self, n=4):
+        return ClusterState.homogeneous(n, A100_80GB)
+
+    def test_schedule_is_deterministic(self):
+        specs = [
+            FaultSpec("gpu_failure", rate=0.05),
+            FaultSpec("node_drain", at=(10.0, 20.0), duration=5.0),
+        ]
+        fleet = self._fleet()
+        a = FaultInjector(specs, seed=3).schedule(fleet, 100.0)
+        b = FaultInjector(specs, seed=3).schedule(fleet, 100.0)
+        assert a == b
+        assert a != FaultInjector(specs, seed=4).schedule(fleet, 100.0)
+
+    def test_substreams_are_independent(self):
+        """Adding a spec never perturbs another spec's events."""
+        a = FaultSpec("gpu_failure", rate=0.05)
+        b = FaultSpec("slice_failure", rate=0.1)
+        fleet = self._fleet()
+        solo = FaultInjector([a], seed=7).schedule(fleet, 200.0)
+        both = FaultInjector([a, b], seed=7).schedule(fleet, 200.0)
+        assert [e for e in both if e.spec == "gpu_failure"] == solo
+
+    def test_targets_repairs_and_horizon(self):
+        fleet = self._fleet(3)
+        events = FaultInjector(
+            [FaultSpec("node_drain", at=(5.0, 500.0), duration=7.0, count=2)],
+            seed=0,
+        ).schedule(fleet, 100.0)
+        drains = [e for e in events if e.kind == "node_drain"]
+        repairs = [e for e in events if e.kind == "repair"]
+        assert len(drains) == 2  # t=500 is past the horizon
+        assert len(repairs) == 2  # one paired repair per incident
+        assert {e.gid for e in events} <= set(fleet.gpus)
+        assert all(r.time == pytest.approx(5.0 + 7.0) for r in repairs)
+        assert len({d.gid for d in drains}) == 2  # count=2, no replacement
+
+    def test_slice_failure_index_in_range(self):
+        fleet = self._fleet()
+        events = FaultInjector(
+            [FaultSpec("slice_failure", at=(1.0, 2.0, 3.0))], seed=1
+        ).schedule(fleet, 10.0)
+        assert events
+        n = A100_80GB.n_memory_slices
+        assert all(0 <= e.index < n for e in events)
+
+    def test_empty_and_unknown_gids(self):
+        fleet = self._fleet()
+        assert FaultInjector([], seed=0).schedule(fleet, 100.0) == []
+        # gids not in the fleet are skipped, not crashed on
+        events = FaultInjector(
+            [FaultSpec("gpu_failure", at=(1.0,), gids=("nope",))], seed=0
+        ).schedule(fleet, 10.0)
+        assert events == []
+
+    def test_spec_validation(self):
+        with pytest.raises(ValueError):
+            FaultSpec("meteor_strike")
+        with pytest.raises(ValueError):
+            FaultSpec("gpu_failure", rate=-1.0)
+        with pytest.raises(ValueError):
+            FaultSpec("gpu_failure", count=0)
+
+
+# ---------------------------------------------------------------------------
+# state: health marks under the journal
+# ---------------------------------------------------------------------------
+class TestHealthJournal:
+    def test_health_and_forget_roll_back_byte_identical(self):
+        state = ClusterState.homogeneous(2, A100_80GB)
+        state.add_workload(Workload("w", 9))
+        state.place("w", "gpu0", 4)
+        before = snap(state)
+        with state.transaction() as txn:
+            state.remove("w", "gpu0")
+            state.forget_workload("w")
+            state.set_health("gpu0", "failed")
+            assert state.gpus["gpu0"].health == "failed"
+            txn.rollback()
+        assert snap(state) == before
+        state.validate()
+
+    def test_unhealthy_gpu_rejects_new_placements(self):
+        state = ClusterState.homogeneous(1, A100_80GB)
+        state.set_health("gpu0", "draining")
+        prof = A100_80GB.profile(9)
+        assert not state.gpus["gpu0"].can_place_at(prof, 4)
+        state.set_health("gpu0", "healthy")
+        assert state.gpus["gpu0"].can_place_at(prof, 4)
+
+    def test_set_health_validates(self):
+        state = ClusterState.homogeneous(1, A100_80GB)
+        with pytest.raises(ValueError):
+            state.set_health("gpu0", "on-fire")
+
+
+class TestCommitEscalation:
+    def test_bypass_lifts_gating_and_budgets(self):
+        cp = CommitPolicy(mode="net-positive", move_budget=1, bytes_budget=10)
+        esc = cp.escalate()
+        assert esc is not None
+        assert esc.mode == "always"
+        assert esc.move_budget is None
+        assert esc.bytes_budget is None
+        assert esc.downtime_budget_seconds is None
+
+    def test_gated_disables_escalation(self):
+        assert CommitPolicy(emergency="gated").escalate() is None
+
+    def test_invalid_tier_rejected(self):
+        with pytest.raises(ValueError):
+            CommitPolicy(emergency="sometimes")
+
+
+# ---------------------------------------------------------------------------
+# OnlineSimulator: eviction, recovery, accounting
+# ---------------------------------------------------------------------------
+def _arrivals(*workloads, t=1.0):
+    return Event(time=t, kind="arrival", workloads=tuple(workloads))
+
+
+class TestOnlineSimulatorFaults:
+    def test_spare_capacity_recovers_immediately(self):
+        state = ClusterState.homogeneous(4, A100_80GB)
+        sim = OnlineSimulator(
+            state,
+            PlacementEngine("rule_based"),
+            faults=FaultInjector(
+                [FaultSpec("gpu_failure", at=(10.0,), gids=("gpu0",))], seed=0
+            ),
+        )
+        stats = sim.run(Trace(
+            events=[_arrivals(Workload("a", 9), Workload("b", 9))],
+            horizon=50.0,
+        ))
+        assert stats.n_gpu_failures == 1
+        assert stats.n_fault_evictions == 2  # rule_based packs both on gpu0
+        assert stats.n_fault_recovered == 2
+        assert stats.n_recovery_pending == 0
+        assert stats.recovery_seconds_max == 0.0  # re-placed the same instant
+        # 1 whole GPU down for the remaining 40s of the horizon
+        assert stats.capacity_lost_gpu_seconds == pytest.approx(40.0)
+        assert state.gpus["gpu0"].health == "failed"
+        assert all(state.gpu_of(w) not in (None, "gpu0") for w in ("a", "b"))
+        state.validate()
+
+    def test_full_fleet_recovers_after_repair(self):
+        state = ClusterState.homogeneous(2, A100_80GB)
+        sim = OnlineSimulator(
+            state,
+            PlacementEngine("rule_based"),
+            faults=FaultInjector(
+                [FaultSpec("gpu_failure", at=(10.0,), duration=20.0,
+                           gids=("gpu0",))],
+                seed=0,
+            ),
+        )
+        # 4 x 3g.40gb fills both GPUs: nowhere to recover until the repair.
+        stats = sim.run(Trace(
+            events=[_arrivals(*(Workload(f"w{i}", 9) for i in range(4)))],
+            horizon=60.0,
+        ))
+        assert stats.n_fault_evictions == 2
+        assert stats.n_repairs == 1
+        assert stats.n_fault_recovered == 2
+        assert stats.n_recovery_pending == 0
+        # evicted at t=10, capacity only back at the t=30 repair
+        assert stats.recovery_seconds_max == pytest.approx(20.0)
+        assert stats.recovery_seconds_total == pytest.approx(20.0)
+        assert stats.capacity_lost_gpu_seconds == pytest.approx(20.0)
+        assert state.gpus["gpu0"].health == "healthy"
+        state.validate()
+
+    def test_permanent_failure_leaves_recovery_pending(self):
+        state = ClusterState.homogeneous(1, A100_80GB)
+        sim = OnlineSimulator(
+            state,
+            PlacementEngine("rule_based"),
+            faults=FaultInjector(
+                [FaultSpec("gpu_failure", at=(10.0,))], seed=0
+            ),
+        )
+        stats = sim.run(Trace(
+            events=[_arrivals(Workload("a", 9))], horizon=50.0
+        ))
+        assert stats.n_fault_evictions == 1
+        assert stats.n_fault_recovered == 0
+        assert stats.n_recovery_pending == 1
+        assert stats.recovery_seconds_total == 0.0  # incident never closed
+        assert stats.capacity_lost_gpu_seconds == pytest.approx(40.0)
+
+    def test_ghost_departure_noops_with_counter(self):
+        state = ClusterState.homogeneous(1, A100_80GB)
+        sim = OnlineSimulator(
+            state,
+            PlacementEngine("rule_based"),
+            faults=FaultInjector(
+                [FaultSpec("gpu_failure", at=(10.0,))], seed=0
+            ),
+        )
+        stats = sim.run(Trace(
+            events=[
+                _arrivals(Workload("a", 9)),
+                Event(time=30.0, kind="departure", wids=("a",)),
+            ],
+            horizon=50.0,
+        ))
+        assert stats.n_ghost_departures == 1
+        assert stats.n_departed == 0  # the ghost is not a real departure
+        assert stats.n_recovery_pending == 0  # its lifetime ended
+
+    def test_slice_failure_kills_only_covering_placement(self):
+        state = ClusterState.homogeneous(2, A100_80GB)
+        for wid, idx in (("lo", 0), ("hi", 4)):
+            state.add_workload(Workload(wid, 9))
+            state.place(wid, "gpu0", idx)
+        sim = OnlineSimulator(
+            state,
+            PlacementEngine("rule_based"),
+            faults=FaultInjector(
+                [FaultSpec("slice_failure", at=(5.0,), gids=("gpu0",))],
+                seed=0,
+            ),
+        )
+        stats = sim.run(Trace(events=[], horizon=40.0))
+        assert stats.n_slice_failures == 1
+        assert stats.n_fault_evictions == 1  # exactly one covers the slice
+        assert stats.n_fault_recovered == 1  # gpu1 had room
+        assert state.gpus["gpu0"].health == "degraded"
+        # the survivor kept serving in place on the degraded GPU
+        assert len(state.gpus["gpu0"].placements) == 1
+        # capacity loss is the slice fraction, not the whole GPU
+        assert stats.capacity_lost_gpu_seconds == pytest.approx(
+            35.0 / A100_80GB.n_memory_slices
+        )
+        state.validate()
+
+    def test_overlapping_fault_is_noop(self):
+        state = ClusterState.homogeneous(2, A100_80GB)
+        sim = OnlineSimulator(
+            state,
+            PlacementEngine("rule_based"),
+            faults=FaultInjector(
+                [FaultSpec("gpu_failure", at=(10.0, 20.0), gids=("gpu0",))],
+                seed=0,
+            ),
+        )
+        stats = sim.run(Trace(events=[], horizon=50.0))
+        assert stats.n_gpu_failures == 1
+        assert stats.n_fault_noops == 1
+
+    def test_disabled_injector_is_byte_identical(self):
+        def run(faults):
+            from repro.core.events import generate_trace
+            fleet = build_fleet([(A100_80GB, 6)])
+            trace = generate_trace(11, fleet, horizon=80.0)
+            sim = OnlineSimulator(
+                fleet, PlacementEngine("rule_based"), compact_every=20.0,
+                faults=faults,
+            )
+            return stats_dict(sim.run(trace)), snap(fleet)
+
+        a_stats, a_state = run(None)
+        b_stats, b_state = run(FaultInjector([]))
+        assert a_stats == b_stats
+        assert a_state == b_state
+
+
+# ---------------------------------------------------------------------------
+# emergency escalation: recovery must repack to make room
+# ---------------------------------------------------------------------------
+def _blocked_fleet():
+    """gpu0 carries two 1g.10gb blockers at memory 1 and 4, so no 3g.40gb
+    (allowed at 0 or 4) fits without repacking; gpu1 hosts the victim."""
+    state = ClusterState.homogeneous(2, A100_80GB)
+    for wid, idx in (("b1", 1), ("b2", 4)):
+        state.add_workload(Workload(wid, 19))
+        state.place(wid, "gpu0", idx)
+    state.add_workload(Workload("v", 9))
+    state.place("v", "gpu1", 4)
+    return state
+
+
+class TestEmergencyEscalation:
+    def _run(self, commit):
+        state = _blocked_fleet()
+        sim = OnlineSimulator(
+            state,
+            PlacementEngine("heuristic", commit=commit),
+            faults=FaultInjector(
+                [FaultSpec("gpu_failure", at=(10.0,), gids=("gpu1",))],
+                seed=0,
+            ),
+        )
+        stats = sim.run(Trace(events=[], horizon=50.0))
+        return state, stats
+
+    def test_bypass_repacks_and_recovers(self):
+        state, stats = self._run(CommitPolicy(mode="net-positive"))
+        assert stats.n_fault_evictions == 1
+        assert stats.n_emergency_commits >= 1
+        assert stats.n_fault_recovered == 1
+        assert stats.n_recovery_pending == 0
+        assert state.gpu_of("v") == "gpu0"
+        state.validate()
+
+    def test_gated_stays_pending(self):
+        state, stats = self._run(
+            CommitPolicy(mode="net-positive", emergency="gated")
+        )
+        assert stats.n_emergency_commits == 0
+        assert stats.n_fault_recovered == 0
+        assert stats.n_recovery_pending == 1
+        state.validate()
+
+
+# ---------------------------------------------------------------------------
+# DemandSimulator: requeue, brownout, warmup
+# ---------------------------------------------------------------------------
+def _slo():
+    return SLO(ttft_seconds=2.0, tpot_seconds=0.05)
+
+
+class TestDemandSimulatorFaults:
+    def _run(self, faults, horizon=120.0, rate=30.0, n_gpus=2):
+        fleet = build_fleet([(A100_80GB, n_gpus)])
+        specs = [
+            ModelServiceSpec(model="chat", profile_id=9, slo=_slo(),
+                             initial_replicas=3),
+            ModelServiceSpec(model="bot", profile_id=19, slo=_slo(),
+                             initial_replicas=1, best_effort=True),
+        ]
+        traffic = generate_requests(
+            [ModelTraffic("chat", ConstantRate(rate)),
+             ModelTraffic("bot", ConstantRate(2.0))],
+            seed=0, horizon=horizon,
+        )
+        sim = DemandSimulator(
+            fleet, PlacementEngine("rule_based"), specs, faults=faults
+        )
+        stats = sim.run(traffic)
+        fleet.validate()
+        return fleet, stats
+
+    def test_eviction_requeues_and_brownout_sheds(self):
+        fleet, stats = self._run(FaultInjector(
+            [FaultSpec("gpu_failure", at=(30.0,), gids=("a100-0",))], seed=0
+        ))
+        assert stats.n_gpu_failures == 1
+        assert stats.n_fault_evictions >= 1
+        # chat load (rate 30 on 3 replicas) keeps replicas busy: the evicted
+        # replica's in-flight request went back to the front of the queue.
+        assert stats.n_requeued_requests >= 1
+        # 2 tight GPUs cannot host all evictions -> brownout until horizon,
+        # shedding the best-effort model's arrivals.
+        if stats.n_recovery_pending:
+            assert stats.brownout_seconds > 0.0
+            assert stats.n_shed_requests >= 1
+        assert stats.n_requests == (
+            stats.n_completed + stats.n_unserved + stats.n_shed_requests
+        )
+
+    def test_recovered_replica_restores_cold(self):
+        # plenty of room to recover into: warmup delay dominates recovery
+        fleet, stats = self._run(
+            FaultInjector(
+                [FaultSpec("gpu_failure", at=(30.0,), gids=("a100-0",))],
+                seed=0,
+            ),
+            n_gpus=4, rate=5.0,
+        )
+        assert stats.n_fault_recovered >= 1
+        assert stats.n_recovery_pending == 0
+        # recovery closes at serving-ready (transfer + cold resume), not at
+        # placement time
+        assert stats.recovery_seconds_max > 0.0
+
+    def test_disabled_injector_is_byte_identical(self):
+        a_fleet, a = self._run(None, rate=5.0)
+        b_fleet, b = self._run(FaultInjector([]), rate=5.0)
+        assert stats_dict(a) == stats_dict(b)
+        assert snap(a_fleet) == snap(b_fleet)
+
+
+# ---------------------------------------------------------------------------
+# ClusterServer: step machine, rollback/resume, NoReplicaError, fail_node
+# ---------------------------------------------------------------------------
+def _fragmented_server(**kw):
+    """4 single-replica models, 2 retired -> compaction has real moves."""
+    srv = ClusterServer(
+        4, device=A100_80GB,
+        step_policy=StepPolicy(backoff_seconds=0.0), **kw,
+    )
+    srv._sleep = lambda s: None  # no real backoff sleeps in tests
+    for m in ("a", "b", "c", "d"):
+        srv.deploy(m, "unused-arch", n_replicas=1, profile_id=9)
+    srv.retire("a", 1)
+    srv.retire("d", 1)
+    return srv
+
+
+def _server_snap(srv):
+    return snap(srv.state)
+
+
+class TestClusterStepMachine:
+    def test_transient_failure_retries_and_commits(self):
+        srv = _fragmented_server()
+        srv.inject_step_failure("copy", times=1)
+        rep = srv.compact()
+        assert rep.committed
+        assert rep.execution.completed
+        assert rep.execution.n_retries == 1
+        srv.state.validate()
+
+    @pytest.mark.parametrize("kind", ["copy", "cutover"])
+    def test_exhausted_retries_roll_back_byte_identical(self, kind):
+        srv = _fragmented_server()
+        before = _server_snap(srv)
+        srv.inject_step_failure(kind, times=99)
+        rep = srv.compact()
+        assert not rep.committed
+        assert rep.execution is not None
+        assert not rep.execution.completed
+        assert rep.execution.rolled_back
+        assert rep.execution.failed_step == kind
+        assert _server_snap(srv) == before
+        srv.state.validate()
+
+    @pytest.mark.parametrize("kind", ["drain", "copy", "resume"])
+    def test_disruptive_plan_fails_at_each_step(self, kind):
+        """Drive _execute_plan directly with a disruptive move so the
+        drain/resume phases exist, and crash each step kind."""
+        srv = _fragmented_server()
+        gid = srv.state.gpu_of("b/r1")
+        plan = MigrationPlan(
+            waves=[[]],
+            disruptive=[Move(
+                wid="b/r1", src_gid=gid, src_index=4,
+                dst_gid=gid, dst_index=4, profile_id=9, disruptive=True,
+            )],
+        )
+        srv.inject_step_failure(kind, times=99)
+        with pytest.raises(PlanExecutionError) as ei:
+            srv._execute_plan(plan)
+        assert ei.value.step == kind
+        assert ei.value.report.failed_step == kind
+        # steps before the failed one are journaled for resume
+        if kind == "resume":
+            assert ("drain", "b/r1", -1) in ei.value.journal
+            assert ("copy", "b/r1", -1) in ei.value.journal
+
+    def test_resume_mode_journals_and_resumes(self):
+        srv = _fragmented_server(on_execution_failure="resume")
+        srv.inject_step_failure("cutover", times=99)
+        rep = srv.compact()
+        assert rep.committed  # layout kept: the engine's commit stands
+        assert rep.execution.resumable
+        assert srv._pending_plan is not None
+        done_before = set(srv._pending_plan[1])
+        srv._failpoints.clear()
+        out = srv.resume_execution()
+        assert out.completed
+        assert srv._pending_plan is None
+        # the resumed run only executed steps missing from the journal
+        assert all(
+            (s.kind, s.wid, s.wave) not in done_before for s in out.steps
+        )
+        srv.state.validate()
+
+    def test_resume_without_pending_is_noop(self):
+        srv = _fragmented_server()
+        assert srv.resume_execution() is None
+
+    def test_step_policy_validation(self):
+        with pytest.raises(ValueError):
+            StepPolicy(max_attempts=0)
+        with pytest.raises(ValueError):
+            ClusterServer(1, device=A100_80GB, on_execution_failure="panic")
+
+
+class TestClusterFaultAPI:
+    def test_route_raises_typed_error(self):
+        srv = ClusterServer(2, device=A100_80GB)
+        with pytest.raises(NoReplicaError) as ei:
+            srv.route("ghost-model")
+        assert ei.value.model == "ghost-model"
+        assert isinstance(ei.value, LookupError)  # old callers still work
+
+    def test_submit_backlogs_and_deploy_flushes(self):
+        srv = ClusterServer(2, device=A100_80GB)
+        assert srv.submit("m", object()) is None
+        assert len(srv._backlog["m"]) == 1
+        srv.deploy("m", "unused-arch", n_replicas=1, profile_id=9)
+        assert len(srv._backlog["m"]) == 0
+
+    def test_fail_node_recovers_elsewhere(self):
+        srv = _fragmented_server()
+        gid = srv.state.gpu_of("b/r1")
+        report = srv.fail_node(gid)
+        assert report["evicted"] == ["b/r1"]
+        assert report["recovered"] == ["b/r1"]
+        assert report["lost"] == []
+        assert srv.state.gpus[gid].health == "failed"
+        new_gid = srv.state.gpu_of("b/r1")
+        assert new_gid is not None and new_gid != gid
+        srv.state.validate()
+        srv.repair_node(gid)
+        assert srv.state.gpus[gid].health == "healthy"
+
+    def test_fail_node_with_no_capacity_loses_replica(self):
+        srv = ClusterServer(1, device=A100_80GB)
+        srv.deploy("m", "unused-arch", n_replicas=1, profile_id=9)
+        gid = srv.state.gpu_of("m/r0")
+        report = srv.fail_node(gid)
+        assert report["lost"] == ["m/r0"]
+        assert "m/r0" not in srv.replicas
+        assert srv.replicas_of("m") == []
+        srv.state.validate()
